@@ -1,0 +1,70 @@
+"""Benchmark harness: one benchmark per paper table (deliverable (d)).
+
+Prints CSV rows ``name,us_per_call,derived``. Training-backed tables are
+scaled to CPU (smoke configs, synthetic C4); the memory tables use the
+paper's exact Appendix-F accounting at full model sizes.
+
+  PYTHONPATH=src python -m benchmarks.run            # full (few minutes)
+  PYTHONPATH=src python -m benchmarks.run --quick    # memory+kernels only
+  PYTHONPATH=src python -m benchmarks.run --only table2_memory
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _emit(rows):
+    for r in rows:
+        name = r.get("bench", "?")
+        sub = [f"{k}={v}" for k, v in r.items() if k != "bench"]
+        us = r.get("us_per_call", r.get("us_per_step", ""))
+        print(f"{name},{us},{';'.join(sub)}")
+    sys.stdout.flush()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import kernel_bench, tables
+
+    all_benches = {
+        "table2_memory": tables.table2_memory,
+        "kernels": kernel_bench.kernel_rows,
+        "table1_support": tables.table1_support,
+        "table2_ppl": tables.table2_ppl,
+        "table3_throughput": tables.table3_throughput,
+        "table5_inference": tables.table5_inference,
+        "table6_ablation": tables.table6_ablation,
+        "fig4_support_seeds": tables.fig4_support_seeds,
+    }
+    quick = {"table2_memory", "kernels", "table3_throughput",
+             "table5_inference"}
+
+    selected = list(all_benches)
+    if args.only:
+        selected = [args.only]
+    elif args.quick:
+        selected = [k for k in all_benches if k in quick]
+
+    print("name,us_per_call,derived")
+    collected = []
+    for name in selected:
+        t0 = time.time()
+        rows = all_benches[name]()
+        _emit(rows)
+        collected += rows
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(collected, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

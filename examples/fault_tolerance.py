@@ -1,0 +1,67 @@
+"""Fault-tolerance demo (DESIGN §7): kill the trainer mid-run, relaunch,
+and verify the final parameters are BIT-EXACT with an uninterrupted run.
+
+Exercises: atomic checkpointing, data-pipeline cursor restore, config-hash
+validation, and the resume-from-latest launcher contract.
+
+  PYTHONPATH=src python examples/fault_tolerance.py
+"""
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, ParamConfig,
+                                TrainConfig)
+from repro.train.trainer import Trainer
+
+cfg = ModelConfig(
+    name="ft-demo", family="llama",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=160,
+    vocab_size=512, vocab_pad_multiple=64, max_seq_len=64,
+    tie_embeddings=False,
+    param=ParamConfig(mode="sltrain", rank=8, delta=0.05, alpha=16.0),
+)
+
+
+def make_tc(ckpt_dir):
+    return TrainConfig(
+        model=cfg,
+        optim=OptimizerConfig(lr=1e-3, warmup_steps=4, total_steps=40),
+        global_batch=4, seq_len=64, steps=40, log_every=10, ckpt_every=10,
+        ckpt_dir=ckpt_dir, async_ckpt=True)
+
+
+class SimulatedPreemption(Exception):
+    pass
+
+
+if __name__ == "__main__":
+    ref_dir = tempfile.mkdtemp(prefix="ft_ref_")
+    crash_dir = tempfile.mkdtemp(prefix="ft_crash_")
+
+    print("== reference run (no faults) ==")
+    ref = Trainer(make_tc(ref_dir)).run()
+
+    print("\n== faulty run: SIGKILL simulation at step 17 ==")
+    crashed = {"done": False}
+
+    def fault(step):
+        if step == 17 and not crashed["done"]:
+            crashed["done"] = True
+            raise SimulatedPreemption("node died")
+
+    try:
+        Trainer(make_tc(crash_dir), fault_hook=fault).run()
+    except SimulatedPreemption as e:
+        print(f"  !! trainer killed: {e}")
+
+    print("\n== relaunch (same command, resumes from latest checkpoint) ==")
+    resumed = Trainer(make_tc(crash_dir)).run()
+
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(ref.params)[0],
+            jax.tree_util.tree_flatten_with_path(resumed.params)[0]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("\nOK: resumed run is BIT-EXACT with the uninterrupted run "
+          f"({len(jax.tree.leaves(ref.params))} parameter leaves compared).")

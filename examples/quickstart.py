@@ -1,0 +1,50 @@
+"""Quickstart: pretrain a small LLaMA with SLTrain on synthetic C4 (CPU).
+
+Shows the public API end-to-end: config → model → SLTrain parameterization
+→ optimizer → trainer → checkpoint → eval. Takes ~1 minute on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+import tempfile
+
+import numpy as np
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, ParamConfig,
+                                TrainConfig)
+from repro.data.pipeline import unigram_entropy
+from repro.train.trainer import Trainer
+
+# A ~1M-param LLaMA with the paper's parameterization: every linear is
+# W = (α/r)·B·A ⊕_I V with fixed random support (δ=0.05).
+cfg = ModelConfig(
+    name="quickstart-llama",
+    family="llama",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=320,
+    vocab_size=2048, vocab_pad_multiple=64, max_seq_len=128,
+    tie_embeddings=False,
+    param=ParamConfig(mode="sltrain", rank=16, delta=0.05, alpha=16.0),
+)
+
+tc = TrainConfig(
+    model=cfg,
+    optim=OptimizerConfig(lr=3e-3, warmup_steps=30, total_steps=300),
+    global_batch=8, seq_len=128, steps=300, log_every=50,
+    ckpt_every=150, ckpt_dir=tempfile.mkdtemp(prefix="quickstart_ckpt_"),
+)
+
+if __name__ == "__main__":
+    h_unigram = unigram_entropy(cfg.vocab_size)
+    print(f"synthetic-C4 unigram entropy (no-learning bound): "
+          f"{h_unigram:.3f} nats")
+    trainer = Trainer(tc)
+    state = trainer.run()
+    losses = [m["loss"] for m in trainer.metrics_history]
+    print(f"\nloss: {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f} "
+          f"(unigram bound {h_unigram:.3f})")
+    assert np.mean(losses[-10:]) < h_unigram, \
+        "model failed to learn beyond unigram statistics"
+    n_train = sum(x.size for x in __import__("jax").tree.leaves(state.params))
+    print(f"trainable params: {n_train/1e6:.2f}M  "
+          f"(checkpoints in {tc.ckpt_dir})")
+    print("OK: SLTrain learned the Markov structure of the corpus.")

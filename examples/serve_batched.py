@@ -1,0 +1,65 @@
+"""Serving example: continuous batching + the SLTrain sparse-decode mode.
+
+Trains a tiny SLTrain model briefly so the weights are non-trivial, then
+serves a mixed batch of requests twice — once with the standard densify
+decode and once with the beyond-paper factored ``sparse`` execution mode
+(DESIGN §3) — and verifies they emit identical tokens while the sparse
+mode reads ~2-3× fewer parameter bytes per step.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, ParamConfig,
+                                TrainConfig)
+from repro.core import sltrain
+from repro.serve.engine import ServeEngine
+from repro.train.trainer import Trainer
+
+cfg = ModelConfig(
+    name="serve-demo", family="llama",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=320,
+    vocab_size=2048, vocab_pad_multiple=64, max_seq_len=128,
+    tie_embeddings=False,
+    param=ParamConfig(mode="sltrain", rank=16, delta=0.05, alpha=16.0),
+)
+
+if __name__ == "__main__":
+    tc = TrainConfig(model=cfg,
+                     optim=OptimizerConfig(lr=3e-3, warmup_steps=10,
+                                           total_steps=100),
+                     global_batch=8, seq_len=64, steps=100, log_every=50,
+                     ckpt_every=0, ckpt_dir=tempfile.mkdtemp())
+    trainer = Trainer(tc)
+    state = trainer.run()
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(3, cfg.vocab_size, size=int(rng.integers(2, 8))
+                            ).tolist() for _ in range(6)]
+    outs = {}
+    for sparse in (False, True):
+        eng = ServeEngine(cfg, state.params, state.consts, n_slots=3,
+                          max_len=64, sparse_decode=sparse)
+        reqs = [eng.submit(p, max_new_tokens=12) for p in prompts]
+        t0 = time.perf_counter()
+        stats = eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        outs[sparse] = [r.out for r in reqs]
+        label = "sparse" if sparse else "dense "
+        total = sum(len(r.out) for r in reqs)
+        print(f"[{label}] {total} tokens in {dt:.2f}s "
+              f"({stats['decode_steps']} batched decode steps)")
+    assert outs[False] == outs[True], "sparse decode diverged from dense!"
+    # parameter-byte accounting per decode step (the decode roofline win)
+    d, f = cfg.d_model, cfg.d_ff
+    dense_bytes = sum(2 * a * b for a, b in
+                      [(d, d)] * 4 + [(d, f)] * 2 + [(f, d)])
+    r = cfg.param.rank
+    tr_, nnz = sltrain.param_count(d, d, r, cfg.param.delta)
+    print(f"\nOK: identical tokens. SLTrain factored decode reads "
+          f"{tr_ * 2}B per d×d matrix vs {2 * d * d}B densified "
+          f"({2 * d * d / (tr_ * 2):.1f}x less HBM traffic per step).")

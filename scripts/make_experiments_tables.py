@@ -1,0 +1,69 @@
+"""Render §Dry-run / §Roofline markdown tables from dryrun JSONL results."""
+import argparse
+import json
+import sys
+
+
+def load(path):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(rows, multi_pod):
+    out = ["| arch | cell | chips | args GiB/dev | temp GiB/dev | "
+           "collectives (AR/AG/RS/A2A/CP) | compile s |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["multi_pod"] != multi_pod:
+            continue
+        c = r["collectives"]["counts"]
+        cc = "/".join(str(c.get(k, 0)) for k in
+                      ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['chips']} | "
+            f"{fmt_bytes(r['bytes_per_device']['argument'])} | "
+            f"{fmt_bytes(r['bytes_per_device']['temp'])} | {cc} | "
+            f"{r['compile_s']} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | cell | t_compute s | t_memory s | t_collective s | "
+           "bottleneck | roofline frac | MODEL_FLOPS/HLO |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["multi_pod"]:
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {rl['t_compute_s']:.3f} | "
+            f"{rl['t_memory_s']:.3f} | {rl['t_collective_s']:.3f} | "
+            f"{rl['bottleneck']} | {rl['roofline_fraction']:.3f} | "
+            f"{rl['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl")
+    ap.add_argument("--which", default="all",
+                    choices=["all", "dryrun1", "dryrun2", "roofline"])
+    a = ap.parse_args()
+    rows = load(a.jsonl)
+    if a.which in ("all", "dryrun1"):
+        print("### single-pod (16×16 = 256 chips)\n")
+        print(dryrun_table(rows, False))
+    if a.which in ("all", "dryrun2"):
+        print("\n### multi-pod (2×16×16 = 512 chips)\n")
+        print(dryrun_table(rows, True))
+    if a.which in ("all", "roofline"):
+        print("\n### roofline (single-pod)\n")
+        print(roofline_table(rows))

@@ -1,0 +1,35 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+print("mesh ok:", mesh.shape)
+
+
+def f(w, x):
+    y = jnp.einsum("bd,dp->bp", x, w)
+    return jnp.sum(y.astype(jnp.float32))
+
+
+w = jax.ShapeDtypeStruct((4096, 8192), jnp.bfloat16)
+x = jax.ShapeDtypeStruct((256, 4096), jnp.bfloat16)
+ws = NamedSharding(mesh, P(None, "model"))
+xs = NamedSharding(mesh, P(("pod", "data"), None))
+with mesh:
+    lowered = jax.jit(f, in_shardings=(ws, xs)).lower(w, x)
+    c = lowered.compile()
+    ca = c.cost_analysis()
+    print("cost_analysis keys:", {k: v for k, v in ca.items() if "flops" in k or "bytes" in k})
+    try:
+        ma = c.memory_analysis()
+        print("memory_analysis:", ma)
+    except Exception as e:
+        print("memory_analysis failed:", e)
+    txt = c.as_text()
+    coll = [l.strip()[:160] for l in txt.splitlines()
+            if any(op in l for op in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"))]
+    print("collectives in compiled HLO:", len(coll))
+    for l in coll[:6]:
+        print("  ", l)

@@ -1,0 +1,50 @@
+import jax, jax.numpy as jnp, numpy as np
+import sys
+sys.path.insert(0, "src")
+from repro.core import sltrain, support
+
+key = jax.random.PRNGKey(0)
+d_in, d_out, r, delta = 64, 96, 8, 0.05
+params, consts = sltrain.init_params(key, d_in, d_out, r, delta, dtype=jnp.float32, seed=3)
+params = jax.tree.map(lambda t: jax.random.normal(jax.random.PRNGKey(7), t.shape, t.dtype) * 0.1, params)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 7, d_in), jnp.float32)
+scale = 0.25
+
+y = sltrain.sl_matmul(x, params, consts, scale)
+W = sltrain.materialize(params, consts, scale)
+y_ref = x @ W
+print("fwd max err:", float(jnp.abs(y - y_ref).max()))
+
+y_sp = sltrain.sl_matmul(x, params, consts, scale, exec_mode="sparse")
+print("sparse-mode max err:", float(jnp.abs(y_sp - y_ref).max()))
+
+
+def loss_custom(p, x):
+    return jnp.sum(jnp.sin(sltrain.sl_matmul(x, p, consts, scale)))
+
+
+def loss_ref(p, x):
+    W = sltrain.densify(p["B"], p["A"], p["v"], consts["rows"], consts["cols"], scale)
+    return jnp.sum(jnp.sin(x @ W))
+
+
+g1, gx1 = jax.grad(loss_custom, argnums=(0, 1))(params, x)
+g2, gx2 = jax.grad(loss_ref, argnums=(0, 1))(params, x)
+for k in ("B", "A", "v"):
+    print(f"grad {k} max err:", float(jnp.abs(g1[k] - g2[k]).max()))
+print("grad x max err:", float(jnp.abs(gx1 - gx2).max()))
+
+# support invariants
+rows, cols = support.sample_support(0, 128, 256, 0.03, "row_balanced")
+assert rows.shape == cols.shape
+assert support.nnz_for(128, 256, 0.03, "row_balanced") == rows.shape[0]
+rows_i, cols_i = support.sample_support(0, 128, 256, 0.03, "iid")
+flat = rows_i.astype(np.int64) * 256 + cols_i
+assert len(np.unique(flat)) == len(flat), "iid support has duplicates"
+perm, local, counts, pad = support.tile_layout(rows, cols, 128, 256, 64, 64)
+assert counts.sum() == rows.shape[0]
+r2, c2, m2, cap = support.partition_support(rows, cols, 4, 256, "col")
+assert m2.sum() == rows.shape[0]
+assert (c2 < 64).all()
+print("support ok; tile pad:", pad, "shard cap:", cap)
+print("OK")

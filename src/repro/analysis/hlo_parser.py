@@ -1,0 +1,325 @@
+"""Post-SPMD HLO cost walker (DESIGN §6).
+
+``compiled.cost_analysis()`` visits every instruction ONCE — a while loop
+(jax.lax.scan over layers) is counted as a single iteration, so depth-L
+models are under-counted by ~L×. This walker parses ``compiled.as_text()``
+and computes, per computation and with loop trip counts multiplied in:
+
+  * flops       — dot/convolution FLOPs (2·prod(result)·prod(contract)),
+  * hbm_bytes   — post-fusion traffic model: every top-level instruction
+                  reads its operands and writes its result once (a fusion
+                  is one instruction ⇒ its internals are VMEM-resident,
+                  exactly the TPU model),
+  * wire_bytes  — ring-algorithm collective bytes (incl. collectives that
+                  live *inside* scan bodies, which a flat regex pass would
+                  count once).
+
+Trip counts are recovered from the loop condition computation: scan lowers
+to a counter compared against a constant; we take the max integer constant
+in the condition computation.
+
+First-order model: elementwise flops are ignored (dots dominate
+transformer steps); parameter/constant/gte/tuple/bitcast ops are
+traffic-free.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_OP_RE = re.compile(r"^\s*([\w\-]+)\((.*)$", re.S)
+
+
+def _split_inst(line: str):
+    """'%name = <result-type> op(operands), attrs' → parts, or None.
+
+    Handles tuple result types with /*index=N*/ comments (which contain '='
+    and defeat naive regexes)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") and not s[:1].isalpha():
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].strip().lstrip("%")
+    rhs = s[eq + 3:]
+    if rhs.startswith("("):          # tuple result type: matching paren
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    result, rest = rhs[:i + 1], rhs[i + 1:]
+                    break
+        else:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        result, rest = rhs[:sp], rhs[sp:]
+    m = _OP_RE.match(rest)
+    if not m:
+        return None
+    return name, result, m.group(1), m.group(2)
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations)="
+    r"(?:%?([\w\.\-]+)|\{([^}]*)\})")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "iota", "copy-start", "copy-done"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start", "reduce-scatter-start"}
+_CALLERS = {"fusion", "call", "conditional", "reduce", "map", "scatter",
+            "sort", "select-and-scatter", "reduce-window", "custom-call"}
+
+
+def _dims(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",") if d]
+
+
+def _prod(xs) -> int:
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(_DTYPE_BYTES.get(d, 0) * _prod(_dims(x))
+               for d, x in _SHAPE_RE.findall(text))
+
+
+@dataclass
+class Inst:
+    name: str
+    op: str
+    result_bytes: int
+    result_dims: List[int]
+    operand_names: List[str]
+    operand_inline_bytes: int   # operands with inline shapes (older HLO)
+    attrs: str
+    called: List[str]
+    cond: Optional[str] = None  # while ops: the condition computation
+
+
+@dataclass
+class Computation:
+    name: str
+    insts: List[Inst] = field(default_factory=list)
+    symbols: Dict[str, Tuple[int, List[int]]] = field(default_factory=dict)
+    max_const: int = 1
+
+
+@dataclass
+class ProgramCost:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    coll_counts: Dict[str, int]
+    coll_wire: Dict[str, float]
+    dot_calls: float
+    trip_counts: Dict[str, int]
+
+
+def _groups(attrs: str) -> Tuple[int, int]:
+    """(group_size, n_groups). One SPMD collective instruction is executed
+    by every group simultaneously — global wire bytes scale with both."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]", attrs)
+    if m:
+        return int(m.group(2)), int(m.group(1))
+    m = re.search(r"replica_groups=\{(\{[^}]*\}(?:,\s*\{[^}]*\})*)\}", attrs)
+    if m:
+        gs = m.group(1).split("},")
+        first = gs[0].strip("{} ")
+        return len([t for t in first.split(",") if t]), len(gs)
+    return 2, 1
+
+
+def _wire(kind: str, opd_b: int, res_b: int, attrs: str) -> float:
+    """Global (all-participant) ring-algorithm wire bytes for one op."""
+    n, g = _groups(attrs)
+    n = max(2, n)
+    base = kind.replace("-start", "")
+    if base == "all-reduce":
+        per = 2.0 * (n - 1) / n * opd_b
+    elif base == "all-gather":
+        per = (n - 1) / n * res_b
+    elif base in ("reduce-scatter", "all-to-all"):
+        per = (n - 1) / n * opd_b
+    else:  # collective-permute: one hop per participating device
+        return float(opd_b) * g
+    return per * n * g
+
+
+def parse_program(hlo_text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line or line.startswith("HloModule"):
+            continue
+        stripped = line.strip()
+        if not line.startswith("  ") and "{" in line and "->" in line:
+            is_entry = stripped.startswith("ENTRY")
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if is_entry:
+                    entry = cur.name
+            continue
+        if stripped == "}" or cur is None:
+            continue
+        for c in _CONST_RE.findall(line):
+            cur.max_const = max(cur.max_const, int(c))
+        parts = _split_inst(line)
+        if parts is None:
+            continue
+        name, result, op, rest = parts
+        res_shapes = _SHAPE_RE.findall(result)
+        res_b = _shapes_bytes(result)
+        res_dims = _dims(res_shapes[0][1]) if res_shapes else []
+        # split "operands) , attrs": find the paren close at depth 0
+        depth, cut = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    cut = i
+                    break
+        opd_text, attrs = rest[:cut], rest[cut:]
+        opd_names = _OPND_RE.findall(opd_text)
+        opd_inline = _shapes_bytes(opd_text)
+        called = []
+        for g1, g2 in _CALLED_RE.findall(attrs):
+            if g1:
+                called.append(g1)
+            elif g2:
+                called += [t.strip().lstrip("%") for t in g2.split(",")]
+        cm = re.search(r"condition=%?([\w\.\-]+)", attrs)
+        inst = Inst(name, op, res_b, res_dims, opd_names, opd_inline,
+                    attrs, called, cond=cm.group(1) if cm else None)
+        cur.insts.append(inst)
+        cur.symbols[name] = (res_b, res_dims)
+    return comps, entry
+
+
+def analyze(hlo_text: str) -> ProgramCost:
+    comps, entry = parse_program(hlo_text)
+    glob: Dict[str, Tuple[int, List[int]]] = {}
+    for c in comps.values():
+        glob.update(c.symbols)
+
+    def opnd_bytes(comp: Computation, inst: Inst) -> int:
+        if inst.operand_inline_bytes:
+            return inst.operand_inline_bytes
+        total = 0
+        for nm in inst.operand_names:
+            rec = comp.symbols.get(nm) or glob.get(nm)
+            if rec:
+                total += rec[0]
+        return total
+
+    def opnd_dims(comp: Computation, inst: Inst, idx: int) -> List[int]:
+        if idx >= len(inst.operand_names):
+            return []
+        nm = inst.operand_names[idx]
+        rec = comp.symbols.get(nm) or glob.get(nm)
+        return rec[1] if rec else []
+
+    memo: Dict[str, Tuple[float, float, float, float, Dict[str, float],
+                          Dict[str, int]]] = {}
+    trip_counts: Dict[str, int] = {}
+
+    def cost(name: str):
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None:
+            return (0.0, 0.0, 0.0, 0.0, {}, {})
+        memo[name] = (0.0, 0.0, 0.0, 0.0, {}, {})  # cycle guard
+        fl = hb = wb = dc = 0.0
+        cw: Dict[str, float] = {}
+        cc: Dict[str, int] = {}
+        for inst in comp.insts:
+            opd_b = opnd_bytes(comp, inst)
+            if inst.op == "while":
+                # trip count = the loop bound constant, which lives in the
+                # CONDITION computation (never the body — bodies contain
+                # unrelated large index constants)
+                trip = 1
+                if inst.cond and inst.cond in comps:
+                    trip = comps[inst.cond].max_const
+                trip_counts[inst.name] = trip
+                for cn in inst.called:
+                    f2, h2, w2, d2, cw2, cc2 = cost(cn)
+                    fl += trip * f2
+                    hb += trip * h2
+                    wb += trip * w2
+                    dc += trip * d2
+                    for k, v in cw2.items():
+                        cw[k] = cw.get(k, 0.0) + trip * v
+                    for k, v in cc2.items():
+                        cc[k] = cc.get(k, 0) + trip * v
+                continue
+            if inst.op in _CALLERS:
+                for cn in inst.called:
+                    f2, h2, w2, d2, cw2, cc2 = cost(cn)
+                    fl += f2            # flops inside fusions count
+                    wb += w2
+                    dc += d2
+                    for k, v in cw2.items():
+                        cw[k] = cw.get(k, 0.0) + v
+                    for k, v in cc2.items():
+                        cc[k] = cc.get(k, 0) + v
+                    # no hbm from callee: fusion internals are VMEM-resident
+            if inst.op == "dot":
+                contract = 1
+                cm = _CONTRACT_RE.search(inst.attrs)
+                lhs = opnd_dims(comp, inst, 0)
+                if cm and lhs:
+                    for ci in _dims(cm.group(1)):
+                        if ci < len(lhs):
+                            contract *= lhs[ci]
+                fl += 2.0 * _prod(inst.result_dims) * contract
+                dc += 1
+            elif inst.op == "convolution":
+                fl += 2.0 * _prod(inst.result_dims) * max(1, opd_b // 4)
+            if inst.op not in _NO_TRAFFIC:
+                hb += opd_b + inst.result_bytes
+            if inst.op in _COLLECTIVES:
+                kind = inst.op.replace("-start", "")
+                w = _wire(inst.op, opd_b, inst.result_bytes, inst.attrs)
+                wb += w
+                cw[kind] = cw.get(kind, 0.0) + w
+                cc[kind] = cc.get(kind, 0) + 1
+        memo[name] = (fl, hb, wb, dc, cw, cc)
+        return memo[name]
+
+    if not entry and comps:
+        entry = list(comps)[-1]
+    fl, hb, wb, dc, cw, cc = cost(entry)
+    return ProgramCost(flops=fl, hbm_bytes=hb, wire_bytes=wb,
+                       coll_counts=cc, coll_wire=cw, dot_calls=dc,
+                       trip_counts=trip_counts)

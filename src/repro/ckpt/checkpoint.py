@@ -1,0 +1,202 @@
+"""Sharded, atomic, async checkpointing with elastic resharding (DESIGN §7).
+
+Layout per checkpoint:   <dir>/step_<N>/
+    manifest.json   — step, config hash, data-pipeline state, tree paths
+    arrays.npz      — one entry per leaf, keyed by "/"-joined tree path
+
+Guarantees:
+  * atomic: written to ``step_<N>.tmp`` then ``os.replace``d — a crash
+    mid-write never corrupts the latest checkpoint,
+  * async: ``save(..., background=True)`` snapshots to host RAM
+    synchronously (so training can mutate params immediately) and writes on
+    a daemon thread; ``wait()`` joins before the next save or exit,
+  * elastic: leaves are saved *unsharded* (host-gathered); ``restore``
+    device_puts onto whatever shardings the new mesh prescribes — a 256-chip
+    checkpoint restores onto 512 chips (or 1 CPU) unchanged,
+  * self-validating: restore checks the config hash and refuses silent
+    architecture drift (pass ``allow_config_change=True`` to migrate).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+# npz can only store native numpy dtypes; bf16/fp8 leaves are saved as raw
+# bit-views with the logical dtype recorded in the manifest.
+_BITVIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _flatten_with_paths(tree):
+    flat, dtypes = {}, {}
+
+    def name(k):
+        if hasattr(k, "key"):
+            return str(k.key)
+        if hasattr(k, "idx"):
+            return str(k.idx)
+        return str(k)
+
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(name(k) for k in path)
+        arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
+        if str(arr.dtype) in _BITVIEW:
+            arr = arr.view(_BITVIEW[str(arr.dtype)])
+        flat[key] = arr
+    return flat, dtypes
+
+
+def _unflatten_like(template, flat: Dict[str, np.ndarray]):
+    def name(k):
+        if hasattr(k, "key"):
+            return str(k.key)
+        if hasattr(k, "idx"):
+            return str(k.idx)
+        return str(k)
+
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, tmpl in paths_leaves:
+        key = _SEP.join(name(k) for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"leaf {key!r}: checkpoint shape {arr.shape} != "
+                f"model shape {tmpl.shape} (elastic restore reshapes "
+                "shardings, never logical shapes)")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, config_hash: str = "",
+             extra: Optional[Dict[str, Any]] = None,
+             background: bool = False) -> str:
+        """Snapshot ``tree`` (params/opt_state/whatever pytree) at ``step``."""
+        self.wait()
+        # Synchronous host snapshot: training may overwrite devices after this.
+        flat, dtypes = _flatten_with_paths(tree)
+        manifest = {
+            "step": int(step),
+            "config_hash": config_hash,
+            "extra": extra or {},
+            "leaves": sorted(flat),
+            "dtypes": dtypes,
+        }
+        final = os.path.join(self.dir, f"step_{step:08d}")
+
+        def write():
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)       # atomic publish
+            self._gc()
+
+        if background:
+            self._thread = threading.Thread(target=self._guard(write),
+                                            daemon=True)
+            self._thread.start()
+        else:
+            write()
+        return final
+
+    def _guard(self, fn):
+        def run():
+            try:
+                fn()
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+        return run
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, *, step: Optional[int] = None,
+                config_hash: str = "", allow_config_change: bool = False,
+                shardings=None) -> Tuple[Any, Dict[str, Any]]:
+        """Load a checkpoint into the structure of ``template``.
+
+        ``shardings``: optional pytree of NamedSharding matching template —
+        this is the elastic-resharding path (checkpoint written under any
+        mesh restores onto the current one)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        if config_hash and manifest["config_hash"] and \
+                manifest["config_hash"] != config_hash:
+            if not allow_config_change:
+                raise ValueError(
+                    f"config hash mismatch: ckpt={manifest['config_hash']} "
+                    f"vs model={config_hash}")
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        for key, dt in manifest.get("dtypes", {}).items():
+            if dt in _BITVIEW and key in flat:
+                flat[key] = flat[key].view(jnp.dtype(dt))
+        tree = _unflatten_like(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda arr, s, tmpl: jax.device_put(
+                    arr.astype(tmpl.dtype) if hasattr(tmpl, "dtype") else arr, s),
+                tree, shardings, template)
+        else:
+            tree = jax.tree.map(
+                lambda arr, tmpl: jax.numpy.asarray(
+                    arr, dtype=getattr(tmpl, "dtype", None)),
+                tree, template)
+        return tree, manifest

@@ -1,0 +1,7 @@
+from repro.configs.base import (ModelConfig, MoEConfig, OptimizerConfig,
+                                ParamConfig, ShapeCell, ShardingConfig,
+                                SHAPE_CELLS, SSMConfig, TrainConfig)
+
+__all__ = ["ModelConfig", "MoEConfig", "OptimizerConfig", "ParamConfig",
+           "ShapeCell", "ShardingConfig", "SHAPE_CELLS", "SSMConfig",
+           "TrainConfig"]

@@ -1,0 +1,209 @@
+"""Config dataclasses for the repro framework.
+
+Everything is a plain frozen dataclass so configs hash (usable as jit static
+args) and serialize into checkpoints for config-drift detection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Parameterization (the paper's contribution lives here)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamConfig:
+    """How linear-layer weights are parameterized.
+
+    mode:
+      dense   — full-rank W                      (paper baseline "Full-Rank")
+      lowrank — W = (alpha/r) B A                (paper baseline "Low-Rank" [24])
+      sltrain — W = (alpha/r) B A  ⊕_I  V        (the paper's method)
+      relora  — W = W0 + (alpha/r) B A, periodic merge (paper baseline [32])
+    """
+    mode: str = "dense"
+    rank: int = 128
+    delta: float = 0.03
+    alpha: float = 32.0
+    # "row_balanced" gives each row exactly round(delta*d_out) entries (better
+    # tile balance + Prop.1 coverage); "iid" matches the paper's sampling.
+    support_kind: str = "row_balanced"
+    # Execution mode for the sparse factor: "dense" densifies (training);
+    # "sparse" uses the factored gather path (decode; beyond-paper, DESIGN §3).
+    exec_mode: str = "dense"
+    # ReLoRA restart period (steps), used only in mode == "relora".
+    relora_period: int = 2000
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / float(self.rank)
+
+
+# ---------------------------------------------------------------------------
+# Model architecture
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0            # routed experts
+    top_k: int = 2
+    n_shared_experts: int = 0     # deepseek-style always-on experts
+    d_ff_expert: int = 0          # per-expert hidden dim
+    first_k_dense: int = 0        # first k layers use a dense FFN
+    d_ff_dense: int = 0           # hidden dim of those dense layers
+    router_aux_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64           # N (per-head state size)
+    conv_width: int = 4
+    n_ssm_heads: int = 0          # mamba2 heads (d_inner / head_dim)
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 128              # SSD chunk length
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "llama"
+    # family: llama | moe | gemma2 | mamba_hybrid | xlstm | whisper | vlm
+    family: str = "llama"
+    n_layers: int = 8
+    d_model: int = 512
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    d_ff: int = 1376
+    vocab_size: int = 32000
+    vocab_pad_multiple: int = 256  # pad vocab so TP divides (DESIGN §4)
+    max_seq_len: int = 4096
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    qkv_bias: bool = False        # qwen2.5
+    tie_embeddings: bool = True
+    # gemma2
+    sliding_window: int = 4096
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    use_post_norms: bool = False  # gemma2 post-attn/post-ffn norms
+    query_pre_attn_scalar: float = 0.0  # gemma2 uses d_model/n_heads
+    attn_pattern: Tuple[str, ...] = ()  # e.g. ("local","global"); empty = all global
+    # QK-norm (qwen3)
+    qk_norm: bool = False
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    # MoE routing groups, aligned with the batch sharding (pod*data size at
+    # scale, 1 on a single device). Group-local dispatch, DESIGN §4.
+    moe_groups: int = 1
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    # mamba_hybrid (zamba2): how many mamba blocks between shared attn blocks
+    hybrid_attn_every: int = 6
+    # xlstm: ratio of mLSTM to sLSTM blocks per super-block
+    xlstm_m_per_s: int = 7
+    # whisper / vlm stubs
+    encoder_layers: int = 0
+    encoder_seq: int = 1500       # whisper stub frame count
+    n_patches: int = 256          # paligemma stub patch count
+    frontend_dim: int = 0         # stub embedding dim (0 -> d_model)
+    # parameterization of linear layers (the paper's technique)
+    param: ParamConfig = field(default_factory=ParamConfig)
+    dtype: str = "bfloat16"
+    # Sequence parallelism (§Perf iteration 2): constrain the residual
+    # stream inside the layer scan to shard its sequence dim over "model",
+    # so saved activations shrink by the TP degree. XLA inserts the
+    # all-gather at attention / reduce-scatter after (standard SP).
+    seq_shard_activations: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim > 0 else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    def hash(self) -> str:
+        return hashlib.sha256(
+            json.dumps(dataclasses.asdict(self), sort_keys=True, default=str).encode()
+        ).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# Training / runtime
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"           # adamw | adam8bit | galore_adamw
+    lr: float = 3e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    # GaLore
+    galore_rank: int = 128
+    galore_update_proj_gap: int = 200
+    galore_scale: float = 0.25
+    # 8-bit Adam
+    q_block: int = 256
+
+
+@dataclass(frozen=True)
+class ShardingConfig:
+    """Named-axis sharding policy (DESIGN §4)."""
+    batch_axes: Tuple[str, ...] = ("pod", "data")
+    model_axis: str = "model"
+    fsdp: bool = False            # shard params/opt over the data axis too
+    fsdp_axis: str = "data"
+    remat: str = "none"           # none | full | dots_saveable
+    grad_accum: int = 1
+    # int8 compression of the cross-pod gradient all-reduce (DESIGN §4)
+    pod_grad_compression: bool = False
+    # shard KV cache sequence dim over the model axis for long-context decode
+    seq_shard_decode: bool = False
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    model: ModelConfig = field(default_factory=ModelConfig)
+    optim: OptimizerConfig = field(default_factory=OptimizerConfig)
+    sharding: ShardingConfig = field(default_factory=ShardingConfig)
+    seed: int = 42
+    global_batch: int = 8
+    seq_len: int = 256
+    steps: int = 50
+    log_every: int = 10
+    ckpt_every: int = 1000
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    async_ckpt: bool = True
+    keep_ckpts: int = 3
+
+
+# ---------------------------------------------------------------------------
+# Shape cells (assigned input shapes; system prompt)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode" | "long_decode"
+
+
+SHAPE_CELLS = (
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "long_decode"),
+)

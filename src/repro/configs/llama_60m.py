@@ -1,0 +1,10 @@
+"""Paper LLaMA 60m config (see llama_paper.py)."""
+from repro.configs.llama_paper import BY_SIZE, LLAMA_60M as CONFIG  # noqa: F401
+import dataclasses
+from repro.configs.base import ParamConfig
+
+SMOKE = dataclasses.replace(
+    CONFIG, name=CONFIG.name + "-smoke", n_layers=2, d_model=64, d_ff=160,
+    n_heads=4, n_kv_heads=4, vocab_size=512, vocab_pad_multiple=16,
+    max_seq_len=128,
+    param=dataclasses.replace(CONFIG.param, rank=8, delta=0.05))

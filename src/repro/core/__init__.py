@@ -1,0 +1,2 @@
+"""Core: the paper's contribution — sparse + low-rank (SLTrain) parameterization."""
+from repro.core import lowrank, memory, relora, sltrain, support  # noqa: F401

@@ -1,0 +1,29 @@
+"""Low-rank linear baseline (paper baseline [24]): W = (alpha/r) B A."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_params(key, d_in: int, d_out: int, rank: int, dtype=jnp.bfloat16):
+    k_a, k_b = jax.random.split(key)
+    lim = float(np.sqrt(6.0 / d_in))
+    return {
+        # Both factors random at init (pretraining-from-scratch, not LoRA
+        # adaptation: zero-B would make W identically 0 with no signal).
+        "B": jax.random.uniform(k_b, (d_in, rank), jnp.float32,
+                                minval=-lim, maxval=lim).astype(dtype),
+        "A": jax.random.uniform(k_a, (rank, d_out), jnp.float32,
+                                minval=-lim, maxval=lim).astype(dtype),
+    }
+
+
+def abstract_params(d_in: int, d_out: int, rank: int, dtype=jnp.bfloat16):
+    sds = jax.ShapeDtypeStruct
+    return {"B": sds((d_in, rank), dtype), "A": sds((rank, d_out), dtype)}
+
+
+def lr_matmul(x, params, scale: float):
+    # (x @ B) @ A ordering: never materializes the d_in×d_out product.
+    return ((x @ params["B"]) @ params["A"]) * jnp.asarray(scale, x.dtype)

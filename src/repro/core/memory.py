@@ -1,0 +1,147 @@
+"""Memory estimator reproducing the paper's Appendix-F accounting.
+
+Conventions (paper §5.1 "Memory cost estimation"):
+  * bf16 params/moments: 2 bytes; 1 G = 1e9 bytes.
+  * SLTrain indices: int64 = 8 B/entry (paper). We also expose the int32
+    convention this framework actually uses on TPU (DESIGN §3).
+  * Adam optimizer state = 2x trainable parameter count.
+  * GaLore: moments live in the projected space (project the smaller matrix
+    dim to rank r), plus the stored projection matrices.
+
+The estimator consumes a *matrix inventory*: every weight matrix in the
+model, flagged ``adapted`` if the method reparameterizes it (all attention +
+MLP linears; embeddings/norms/head stay dense — paper §5.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+from repro.core import support as support_lib
+
+
+@dataclass(frozen=True)
+class MatrixInfo:
+    name: str
+    d_in: int
+    d_out: int
+    adapted: bool = True
+    count: int = 1          # e.g. n_layers or n_layers*n_experts
+
+
+@dataclass(frozen=True)
+class MemoryEstimate:
+    method: str
+    param_count: float
+    trainable_count: float
+    param_bytes: float
+    optim_bytes: float
+
+    @property
+    def total_bytes(self) -> float:
+        return self.param_bytes + self.optim_bytes
+
+    def gb(self, x: float) -> float:
+        return x / 1e9
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "method": self.method,
+            "params_M": self.param_count / 1e6,
+            "trainable_M": self.trainable_count / 1e6,
+            "param_G": self.gb(self.param_bytes),
+            "optim_G": self.gb(self.optim_bytes),
+            "total_G": self.gb(self.total_bytes),
+        }
+
+
+def estimate(inventory: List[MatrixInfo], method: str, *, rank: int = 128,
+             delta: float = 0.03, dtype_bytes: int = 2, index_bytes: int = 8,
+             support_kind: str = "iid", galore_rank: int | None = None
+             ) -> MemoryEstimate:
+    galore_rank = galore_rank or rank
+    base = sum(m.d_in * m.d_out * m.count for m in inventory if not m.adapted)
+    dense_adapted = sum(m.d_in * m.d_out * m.count for m in inventory if m.adapted)
+    lr_adapted = sum((m.d_in + m.d_out) * rank * m.count
+                     for m in inventory if m.adapted)
+
+    if method == "full":
+        p = base + dense_adapted
+        return MemoryEstimate(method, p, p, p * dtype_bytes, 2 * p * dtype_bytes)
+
+    if method == "lowrank":
+        p = base + lr_adapted
+        return MemoryEstimate(method, p, p, p * dtype_bytes, 2 * p * dtype_bytes)
+
+    if method == "relora":
+        # stores W0 (dense) + factors; moments only on trainable (factors+base)
+        p = base + dense_adapted + lr_adapted
+        t = base + lr_adapted
+        return MemoryEstimate(method, p, t, p * dtype_bytes, 2 * t * dtype_bytes)
+
+    if method == "galore":
+        p = base + dense_adapted
+        proj = 0.0
+        moments = 2.0 * base
+        for m in inventory:
+            if not m.adapted:
+                continue
+            small, big = min(m.d_in, m.d_out), max(m.d_in, m.d_out)
+            r = min(galore_rank, small)
+            proj += small * r * m.count
+            moments += 2.0 * r * big * m.count
+        return MemoryEstimate(method, p, p, p * dtype_bytes,
+                              (moments + proj) * dtype_bytes)
+
+    if method == "sltrain":
+        nnz = sum(support_lib.nnz_for(m.d_in, m.d_out, delta, support_kind)
+                  * m.count for m in inventory if m.adapted)
+        t = base + lr_adapted + nnz
+        param_bytes = t * dtype_bytes + nnz * index_bytes
+        return MemoryEstimate(method, t, t, param_bytes, 2 * t * dtype_bytes)
+
+    raise ValueError(f"unknown method {method!r}")
+
+
+def llama_inventory(n_layers: int, d_model: int, d_ff: int, vocab: int,
+                    n_heads: int = 0, n_kv_heads: int = 0, head_dim: int = 0,
+                    tie_embeddings: bool = False) -> List[MatrixInfo]:
+    """Inventory for a LLaMA-family model (SwiGLU MLP, untied head by default
+    — matches the paper's 60M–7B accounting)."""
+    hd = head_dim or (d_model // max(1, n_heads))
+    nh = n_heads or (d_model // hd)
+    nkv = n_kv_heads or nh
+    inv = [
+        MatrixInfo("embed", vocab, d_model, adapted=False),
+        MatrixInfo("wq", d_model, nh * hd, count=n_layers),
+        MatrixInfo("wk", d_model, nkv * hd, count=n_layers),
+        MatrixInfo("wv", d_model, nkv * hd, count=n_layers),
+        MatrixInfo("wo", nh * hd, d_model, count=n_layers),
+        MatrixInfo("gate", d_model, d_ff, count=n_layers),
+        MatrixInfo("up", d_model, d_ff, count=n_layers),
+        MatrixInfo("down", d_ff, d_model, count=n_layers),
+    ]
+    if not tie_embeddings:
+        inv.append(MatrixInfo("lm_head", d_model, vocab, adapted=False))
+    return inv
+
+
+# The paper's LLaMA pretraining configs (GaLore/ReLoRA lineage).
+PAPER_LLAMA = {
+    "60m": dict(n_layers=8, d_model=512, d_ff=1376, vocab=32000, n_heads=8, rank=128),
+    "130m": dict(n_layers=12, d_model=768, d_ff=2048, vocab=32000, n_heads=12, rank=256),
+    "350m": dict(n_layers=24, d_model=1024, d_ff=2736, vocab=32000, n_heads=16, rank=256),
+    "1b": dict(n_layers=24, d_model=2048, d_ff=5461, vocab=32000, n_heads=32, rank=512),
+    "7b": dict(n_layers=32, d_model=4096, d_ff=11008, vocab=32000, n_heads=32, rank=1024),
+}
+
+
+def paper_table8(size: str, delta: float = 0.03) -> Dict[str, Dict[str, float]]:
+    """Reproduce Table 8 (memory breakdown) for one paper model size."""
+    cfg = dict(PAPER_LLAMA[size])
+    rank = cfg.pop("rank")
+    inv = llama_inventory(**cfg)
+    out = {}
+    for method in ("full", "lowrank", "relora", "galore", "sltrain"):
+        out[method] = estimate(inv, method, rank=rank, delta=delta).as_dict()
+    return out

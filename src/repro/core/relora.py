@@ -1,0 +1,49 @@
+"""ReLoRA baseline (paper baseline [32]): W = W0 + (alpha/r) B A with
+periodic merge-and-restart. W0 is dense (ReLoRA is NOT parameter efficient —
+that is the paper's point); B, A are the only trainable factors between
+merges, so optimizer state is factored-sized."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_params(key, d_in: int, d_out: int, rank: int, dtype=jnp.bfloat16):
+    k_w, k_a = jax.random.split(key)
+    std = float(np.sqrt(2.0 / (d_in + d_out)))
+    return {
+        "W0": (jax.random.normal(k_w, (d_in, d_out), jnp.float32) * std).astype(dtype),
+        "B": jnp.zeros((d_in, rank), dtype=dtype),
+        "A": (jax.random.uniform(k_a, (rank, d_out), jnp.float32,
+                                 minval=-np.sqrt(6.0 / d_in),
+                                 maxval=np.sqrt(6.0 / d_in))).astype(dtype),
+    }
+
+
+def abstract_params(d_in: int, d_out: int, rank: int, dtype=jnp.bfloat16):
+    sds = jax.ShapeDtypeStruct
+    return {"W0": sds((d_in, d_out), dtype), "B": sds((d_in, rank), dtype),
+            "A": sds((rank, d_out), dtype)}
+
+
+def rl_matmul(x, params, scale: float):
+    y = x @ params["W0"]
+    return y + ((x @ params["B"]) @ params["A"]) * jnp.asarray(scale, x.dtype)
+
+
+def merge(params, key, scale: float):
+    """Merge the adaptor into W0 and restart the factors (ReLoRA period end).
+
+    Stack-agnostic: factors may carry leading layer-stack dims (L, ..., d, r)
+    from scan-over-layers. The caller must also reset the Adam moments for
+    B/A (repro.train.trainer._make_relora_merge does)."""
+    d_in = params["B"].shape[-2]
+    BA = jnp.einsum("...ir,...rj->...ij",
+                    params["B"].astype(jnp.float32),
+                    params["A"].astype(jnp.float32)) * scale
+    W0 = params["W0"] + BA.astype(params["W0"].dtype)
+    lim = float(np.sqrt(6.0 / d_in))
+    A = jax.random.uniform(key, params["A"].shape, jnp.float32,
+                           minval=-lim, maxval=lim).astype(params["A"].dtype)
+    return {"W0": W0, "B": jnp.zeros_like(params["B"]), "A": A}

@@ -1,0 +1,139 @@
+"""Fixed random sparse support for SLTrain (paper §3.2, §3.3).
+
+The support I is sampled once at init and never learned. We provide
+
+  * ``sample_support`` — (rows, cols) int32 arrays, either iid-uniform
+    (paper) or row-balanced (each row gets exactly k = round(delta*d_out)
+    entries; better Prop.1 coverage and perfectly balanced shards/tiles).
+  * ``nnz_for`` — deterministic nnz so dry-run ShapeDtypeStructs agree with
+    real init.
+  * ``tile_layout`` — re-orders a support into the tile-CSR layout consumed
+    by the Pallas kernels (entries bucketed by (tile_r, tile_c), padded to
+    the per-tile max with sentinel entries whose value contribution is 0).
+  * ``partition_support`` — deterministic split of the support by shard
+    owner along either matrix dim, for TP/EP sharding of V (DESIGN §4).
+
+Everything here runs at *init time* on host (numpy), keyed by an integer
+seed, so elastic restore can re-derive identical supports on a new mesh.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def nnz_for(d_in: int, d_out: int, delta: float, kind: str = "row_balanced") -> int:
+    """Number of nonzeros; deterministic function of the shape and delta."""
+    if kind == "row_balanced":
+        k = max(1, int(round(delta * d_out)))
+        return d_in * k
+    return max(1, int(round(delta * d_in * d_out)))
+
+
+def sample_support(
+    seed: int, d_in: int, d_out: int, delta: float, kind: str = "row_balanced"
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Sample the fixed support. Returns (rows, cols) int32, row-major sorted."""
+    rng = np.random.default_rng(np.uint64(seed))
+    if kind == "row_balanced":
+        k = max(1, int(round(delta * d_out)))
+        # per-row choice without replacement via partial argsort of random keys
+        cols = np.empty((d_in, k), dtype=np.int32)
+        # vectorized: random matrix argpartition per row
+        keys = rng.random((d_in, d_out), dtype=np.float32) if d_in * d_out <= (1 << 26) else None
+        if keys is not None:
+            cols = np.argpartition(keys, k, axis=1)[:, :k].astype(np.int32)
+        else:  # large matrices: per-row sampling loop in blocks (init-time only)
+            for i in range(d_in):
+                cols[i] = rng.choice(d_out, size=k, replace=False).astype(np.int32)
+        cols.sort(axis=1)
+        rows = np.repeat(np.arange(d_in, dtype=np.int32), k)
+        return rows, cols.reshape(-1)
+    # iid uniform support (paper's sampling): draw flat indices w/o replacement
+    nnz = nnz_for(d_in, d_out, delta, kind)
+    total = d_in * d_out
+    flat = rng.choice(total, size=nnz, replace=False)
+    flat.sort()
+    rows = (flat // d_out).astype(np.int32)
+    cols = (flat % d_out).astype(np.int32)
+    return rows, cols
+
+
+def tile_layout(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    d_in: int,
+    d_out: int,
+    tile_r: int = 128,
+    tile_c: int = 128,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Bucket support entries by (row-tile, col-tile) for the Pallas kernels.
+
+    Returns (perm, local_rc, tile_counts, pad_per_tile) where
+      * perm        int32[n_tiles * pad] — index into the original (rows, cols,
+                    values) arrays, with -1 for padding slots,
+      * local_rc    int32[n_tiles * pad, 2] — (row, col) local to the tile;
+                    padding slots point at (0, 0),
+      * tile_counts int32[nt_r, nt_c] — real entries per tile,
+      * pad_per_tile — the uniform per-tile capacity (max count, rounded up to
+                    a multiple of 8 for TPU-friendly strides).
+    """
+    nt_r = (d_in + tile_r - 1) // tile_r
+    nt_c = (d_out + tile_c - 1) // tile_c
+    t_id = (rows // tile_r).astype(np.int64) * nt_c + (cols // tile_c)
+    order = np.argsort(t_id, kind="stable")
+    t_sorted = t_id[order]
+    counts = np.bincount(t_sorted, minlength=nt_r * nt_c).astype(np.int32)
+    pad = int(counts.max()) if counts.size else 0
+    pad = max(8, ((pad + 7) // 8) * 8)
+    n_tiles = nt_r * nt_c
+    perm = np.full((n_tiles, pad), -1, dtype=np.int32)
+    local = np.zeros((n_tiles, pad, 2), dtype=np.int32)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    for t in range(n_tiles):
+        c = counts[t]
+        if c == 0:
+            continue
+        idx = order[starts[t] : starts[t] + c]
+        perm[t, :c] = idx
+        local[t, :c, 0] = rows[idx] % tile_r
+        local[t, :c, 1] = cols[idx] % tile_c
+    return perm.reshape(-1), local.reshape(-1, 2), counts.reshape(nt_r, nt_c), pad
+
+
+def partition_support(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    n_shards: int,
+    dim_size: int,
+    axis: str = "col",
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Split support by shard owner along rows ("row") or cols ("col").
+
+    Returns (rows_sh, cols_sh, valid_mask, per_shard) with shapes
+    (n_shards, per_shard); indices are *local* to the shard along the
+    partitioned axis. Padded slots have mask=0 and index 0 (their values are
+    forced to 0 so they contribute nothing). Deterministic: elastic restore
+    with a different n_shards re-derives partitions from the same support.
+    """
+    key = rows if axis == "row" else cols
+    shard_sz = dim_size // n_shards
+    owner = np.minimum(key // shard_sz, n_shards - 1)
+    per = np.bincount(owner, minlength=n_shards)
+    cap = int(per.max()) if per.size else 1
+    cap = max(8, ((cap + 7) // 8) * 8)
+    r = np.zeros((n_shards, cap), dtype=np.int32)
+    c = np.zeros((n_shards, cap), dtype=np.int32)
+    m = np.zeros((n_shards, cap), dtype=bool)
+    for s in range(n_shards):
+        sel = np.nonzero(owner == s)[0]
+        rs, cs = rows[sel], cols[sel]
+        if axis == "row":
+            rs = rs - s * shard_sz
+        else:
+            cs = cs - s * shard_sz
+        r[s, : sel.size] = rs
+        c[s, : sel.size] = cs
+        m[s, : sel.size] = True
+    return r, c, m, cap

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticC4, unigram_entropy  # noqa: F401

@@ -1,0 +1,189 @@
+"""jit'd wrappers around the Pallas kernels: shape padding, tile-CSR
+support preparation, and the custom-VJP SLTrain linear that fuses
+``sl_matmul`` forward with the ``sddmm`` backward.
+
+``interpret=True`` everywhere on CPU (this container); on TPU the same
+calls lower to real Mosaic kernels (interpret=False).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import support as support_lib
+from repro.kernels import adam8bit as adam8bit_kernel
+from repro.kernels import sddmm as sddmm_kernel
+from repro.kernels import sl_matmul as sl_kernel
+
+INTERPRET = True  # flipped to False by the TPU launcher
+
+
+# ---------------------------------------------------------------------------
+# Tile-CSR support preparation (init-time, host numpy)
+# ---------------------------------------------------------------------------
+
+def prepare_tiles(rows: np.ndarray, cols: np.ndarray, v: np.ndarray,
+                  d_in: int, d_out: int, tile_r: int = 128,
+                  tile_c: int = 128) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                              jnp.ndarray]:
+    """COO support + values → (v_t, rows_t, cols_t) of shape
+    (K/tile_r, N/tile_c, E): the layout both kernels consume. Padding slots
+    carry v = 0 at local (0, 0). Dims are padded up to tile multiples."""
+    kp = ((d_in + tile_r - 1) // tile_r) * tile_r
+    np_ = ((d_out + tile_c - 1) // tile_c) * tile_c
+    perm, local, counts, pad = support_lib.tile_layout(
+        rows, cols, kp, np_, tile_r, tile_c)
+    nkt, nnt = kp // tile_r, np_ // tile_c
+    v_flat = np.asarray(v, dtype=np.float32).reshape(-1)
+    vt = np.where(perm >= 0, v_flat[np.maximum(perm, 0)], 0.0
+                  ).astype(np.float32).reshape(nkt, nnt, pad)
+    rt = local[:, 0].reshape(nkt, nnt, pad).astype(np.int32)
+    ct = local[:, 1].reshape(nkt, nnt, pad).astype(np.int32)
+    return jnp.asarray(vt), jnp.asarray(rt), jnp.asarray(ct), jnp.asarray(
+        perm.reshape(nkt, nnt, pad))
+
+
+def _pad2(x, mult_r, mult_c):
+    r = (-x.shape[0]) % mult_r
+    c = (-x.shape[1]) % mult_c
+    if r or c:
+        x = jnp.pad(x, ((0, r), (0, c)))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Forward / backward wrappers
+# ---------------------------------------------------------------------------
+
+def sl_matmul(x, B, A, v_t, rows_t, cols_t, scale: float, *,
+              bm: int = 128, interpret: bool | None = None):
+    """y = x @ (scale·B·A ⊕ V); arbitrary (unpadded) logical shapes."""
+    interp = INTERPRET if interpret is None else interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = A.shape[-1]
+    xf = _pad2(x.reshape(-1, k), bm, 128)
+    Bp = _pad2(B, 128, 1)
+    Ap = _pad2(A, 1, 128)
+    y = sl_kernel.sl_matmul(xf, Bp, Ap, v_t, rows_t, cols_t, scale=scale,
+                            bm=bm, interpret=interp)
+    m = int(np.prod(lead)) if lead else 1
+    return y[:m, :n].reshape(*lead, n)
+
+
+def sddmm(x, dy, rows_t, cols_t, *, bm: int = 128,
+          interpret: bool | None = None):
+    """dv tiles for support (rows_t, cols_t); x (..., K), dy (..., N)."""
+    interp = INTERPRET if interpret is None else interpret
+    k = x.shape[-1]
+    n = dy.shape[-1]
+    xf = _pad2(x.reshape(-1, k), bm, 128)
+    dyf = _pad2(dy.reshape(-1, n), bm, 128)
+    return sddmm_kernel.sddmm(xf, dyf, rows_t, cols_t, bm=bm,
+                              interpret=interp)
+
+
+# ---------------------------------------------------------------------------
+# Fused SLTrain linear: pallas forward + pallas backward, custom VJP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def sl_linear_fused(x, B, A, v_t, rows_t, cols_t, scale):
+    return sl_matmul(x, B, A, v_t, rows_t, cols_t, scale)
+
+
+def _fused_fwd(x, B, A, v_t, rows_t, cols_t, scale):
+    y = sl_matmul(x, B, A, v_t, rows_t, cols_t, scale)
+    return y, (x, B, A, v_t, rows_t, cols_t)
+
+
+def _fused_bwd(scale, res, dy):
+    x, B, A, v_t, rows_t, cols_t = res
+    k = x.shape[-1]
+    n = dy.shape[-1]
+    xf = x.reshape(-1, k)
+    dyf = dy.reshape(-1, n)
+    # factored grads via the (token-dim contracted) products — same algebra
+    # as core.sltrain, the d_in×d_out transient only ever exists per-tile
+    # inside the sddmm kernel.
+    xB = (xf @ B).astype(jnp.float32)                     # (M, r)
+    dA = (scale * (xB.T @ dyf.astype(jnp.float32))).astype(A.dtype)
+    dyA = (dyf @ A.T).astype(jnp.float32)                 # (M, r)
+    dB = (scale * (xf.astype(jnp.float32).T @ dyA)).astype(B.dtype)
+    dv_t = sddmm(xf, dyf, rows_t, cols_t).astype(v_t.dtype)
+    # dx = dy @ W^T: reuse the fused kernel on the transposed factors. The
+    # support transpose is (cols_t, rows_t) tiles transposed in the grid —
+    # equivalently run sl_matmul with swapped tile axes.
+    vt_T = jnp.swapaxes(v_t, 0, 1)
+    rt_T = jnp.swapaxes(cols_t, 0, 1)
+    ct_T = jnp.swapaxes(rows_t, 0, 1)
+    dx = sl_matmul(dyf, A.T, B.T, vt_T, rt_T, ct_T, scale
+                   ).reshape(x.shape).astype(x.dtype)
+    return dx, dB, dA, dv_t, None, None
+
+
+sl_linear_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+# ---------------------------------------------------------------------------
+# 8-bit Adam wrapper (flat pytree leaf)
+# ---------------------------------------------------------------------------
+
+def adam8bit_update(p, g, m_codes, m_scales, v_codes, v_scales, *,
+                    lr, b1, b2, bc1, bc2, eps, wd, q: int = 256,
+                    interpret: bool | None = None):
+    """One fused 8-bit Adam step on an arbitrary-shape leaf."""
+    interp = INTERPRET if interpret is None else interpret
+    shape = p.shape
+    n = p.size
+    pad = (-n) % q
+
+    def blk(a):
+        """Pad a logical-size leaf (p, g) up to whole quantization blocks.
+        Codes/scales are already block-shaped and pass through reshape."""
+        f = a.reshape(-1)
+        if f.size == n and pad:
+            f = jnp.pad(f, (0, pad))
+        return f.reshape(-1, q)
+
+    n_q = (n + pad) // q
+    bb = 1
+    for cand in (64, 32, 16, 8, 4, 2, 1):
+        if n_q % cand == 0:
+            bb = cand
+            break
+    scalars = jnp.array([lr, b1, b2, bc1, bc2, eps, wd, 0.0], jnp.float32)
+    new_p, mc, ms, vc, vs = adam8bit_kernel.adam8bit_update(
+        blk(p), blk(g), blk(m_codes), m_scales.reshape(-1),
+        blk(v_codes), v_scales.reshape(-1), scalars, bb=bb, interpret=interp)
+    return (new_p.reshape(-1)[:n].reshape(shape), mc, ms, vc, vs)
+
+
+# ---------------------------------------------------------------------------
+# Factored decode path (sparse-only kernel + small low-rank dots)
+# ---------------------------------------------------------------------------
+
+def sl_decode(x, B, A, v_t, rows_t, cols_t, scale: float, *,
+              interpret: bool | None = None):
+    """SLTrain decode matmul without densifying: (x·B)·A·scale + x·S via the
+    sparse_decode kernel (DESIGN §3 beyond-paper). Reads factored bytes
+    only — the decode HBM term drops by the compression ratio."""
+    from repro.kernels import sparse_decode as sd_kernel
+    interp = INTERPRET if interpret is None else interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = A.shape[-1]
+    xf = x.reshape(-1, k)
+    m = xf.shape[0]
+    bm = 8
+    pad_m = (-m) % bm
+    pad_k = (-k) % 128
+    xp = jnp.pad(xf, ((0, pad_m), (0, pad_k)))
+    y_lr = ((xf @ B) @ A) * jnp.asarray(scale, x.dtype)
+    y_sp = sd_kernel.sparse_matmul(xp, v_t, rows_t, cols_t, bm=bm,
+                                   interpret=interp)[:m, :n]
+    return (y_lr + y_sp.astype(x.dtype)).reshape(*lead, n)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sl_matmul_ref(x, B, A, rows, cols, v, scale: float):
+    """y = x @ (scale·B·A ⊕_(rows,cols) v), densified in f32."""
+    W = (B.astype(jnp.float32) @ A.astype(jnp.float32)) * scale
+    W = W.at[rows, cols].add(v.astype(jnp.float32), mode="drop",
+                             unique_indices=True)
+    return (x.astype(jnp.float32) @ W).astype(x.dtype)
+
+
+def sddmm_ref(x, dy, rows, cols):
+    """dv = (xᵀ·dy)[rows, cols] in f32."""
+    G = x.astype(jnp.float32).T @ dy.astype(jnp.float32)
+    return G[rows, cols]
+
+
+def adam8bit_ref(p, g, m_codes, m_scales, v_codes, v_scales, scalars):
+    """Blockwise 8-bit Adam step; shapes as in kernels.adam8bit."""
+    lr, b1, b2, bc1, bc2, eps, wd = [scalars[i] for i in range(7)]
+    g = g.astype(jnp.float32)
+    pf = p.astype(jnp.float32)
+    m = m_codes.astype(jnp.float32) * m_scales[:, None]
+    # half-quant-step floor on v (see kernels/adam8bit.py)
+    v = jnp.maximum(v_codes.astype(jnp.float32) + 128.0, 0.5) \
+        * v_scales[:, None]
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    u = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * pf
+    new_p = (pf - lr * u).astype(p.dtype)
+    ms = jnp.max(jnp.abs(m), axis=1) / 127.0
+    mc = jnp.round(m / jnp.maximum(ms, 1e-12)[:, None]).astype(jnp.int8)
+    vs = jnp.max(v, axis=1) / 255.0
+    vc = (jnp.round(v / jnp.maximum(vs, 1e-12)[:, None]) - 128.0
+          ).astype(jnp.int8)
+    return new_p, mc, ms, vc, vs
+
+
+def sl_decode_ref(x, B, A, rows, cols, v, scale: float):
+    """Oracle for the factored decode path — same densified math."""
+    return sl_matmul_ref(x, B, A, rows, cols, v, scale)

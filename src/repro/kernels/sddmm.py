@@ -1,0 +1,69 @@
+"""SDDMM sparse-gradient kernel: dV = (xᵀ·dy)_I  (DESIGN §3.3).
+
+The paper's backward (eq. 2) forms the full-rank transient G = xᵀ∇z in HBM
+and gathers the support entries. On TPU we fuse: each (k, n) tile of G is
+computed in VMEM (accumulating over the token dimension m) and only the
+*gathered* values leave the kernel — the d_in·d_out transient never touches
+HBM.
+
+Gather-as-matmul: dv[e] = G[row_e, col_e] = (P_r · G ⊙ P_c)·1, i.e. one
+(E, bk)@(bk, bn) MXU matmul + a masked row-sum, where P_r/P_c are the
+one-hot support matrices of the tile. Grid: (K/bk, N/bn, M/bm), m
+innermost, accumulating into the (1, 1, E) output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dy_ref, r_ref, c_ref, o_ref):
+    m = pl.program_id(2)
+
+    @pl.when(m == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bk = x_ref.shape[1]
+    bn = dy_ref.shape[1]
+    # tile of G = x^T dy, f32 on the MXU
+    g = jax.lax.dot(x_ref[...].T, dy_ref[...],
+                    preferred_element_type=jnp.float32)      # (bk, bn)
+    rows = r_ref[0, 0, :]
+    cols = c_ref[0, 0, :]
+    e = rows.shape[0]
+    pr = (rows[:, None] == jax.lax.broadcasted_iota(jnp.int32, (e, bk), 1))
+    pc = (cols[:, None] == jax.lax.broadcasted_iota(jnp.int32, (e, bn), 1))
+    rows_of_g = jax.lax.dot(pr.astype(jnp.float32), g,
+                            preferred_element_type=jnp.float32)  # (E, bn)
+    dv = jnp.sum(rows_of_g * pc.astype(jnp.float32), axis=1)     # (E,)
+    o_ref[...] += dv[None, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def sddmm(x, dy, rows_t, cols_t, *, bm: int = 128, bk: int = 128,
+          bn: int = 128, interpret: bool = True):
+    """dv tiles (K/bk, N/bn, E) f32 for the support laid out by
+    ``ops.prepare_tiles``; x (M, K), dy (M, N) pre-padded to tile multiples."""
+    m, k = x.shape
+    n = dy.shape[1]
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n)
+    nkt, nnt, e = rows_t.shape
+    assert (nkt, nnt) == (k // bk, n // bn), rows_t.shape
+    grid = (k // bk, n // bn, m // bm)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda kk, j, i: (i, kk)),
+            pl.BlockSpec((bm, bn), lambda kk, j, i: (i, j)),
+            pl.BlockSpec((1, 1, e), lambda kk, j, i: (kk, j, 0)),
+            pl.BlockSpec((1, 1, e), lambda kk, j, i: (kk, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, e), lambda kk, j, i: (kk, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nkt, nnt, e), jnp.float32),
+        interpret=interpret,
+    )(x, dy, rows_t, cols_t)

@@ -1,0 +1,92 @@
+"""Fused SLTrain matmul kernel: y = x @ (scale·B·A ⊕_I V)  (DESIGN §3.1).
+
+TPU adaptation of the paper's scatter-add forward. The GPU reference
+materializes W = BA ⊕ V in HBM and then runs a dense GEMM — two extra HBM
+round-trips of d_in·d_out·2 bytes. Here each (k, n) grid cell *densifies
+its own 128×128 tile in VMEM* and immediately feeds it to the MXU; the
+dense W never exists in HBM.
+
+Scatter-as-matmul (DESIGN §3.2): TPUs have no fast unstructured VMEM
+scatter, so the per-tile scatter is expressed as
+
+    W_tile += P_r^T · diag(v) · P_c,   P_r = onehot(rows, bk),
+                                       P_c = onehot(cols, bn)
+
+two small MXU matmuls — the sparse work also runs on the systolic array.
+
+Support layout: ``support.tile_layout`` buckets the fixed support by
+128×128 tile at init, padded to the per-tile max (uniform random support ⇒
+tight concentration). Padding slots carry v = 0 so they contribute nothing.
+
+Grid: (M/bm, N/bn, K/bk), k innermost; the f32 output block is revisited
+across k and used as the accumulator (standard Pallas matmul pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, b_ref, a_ref, v_ref, r_ref, c_ref, o_ref, *,
+            scale: float, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bk = b_ref.shape[0]
+    bn = a_ref.shape[1]
+    # low-rank tile: (bk, r) @ (r, bn) on the MXU, f32 accumulation
+    w = jax.lax.dot(b_ref[...], a_ref[...],
+                    preferred_element_type=jnp.float32) * scale
+    # sparse tile via one-hot matmuls (scatter-as-matmul)
+    rows = r_ref[0, 0, :]                                # (E,) local row ids
+    cols = c_ref[0, 0, :]
+    v = v_ref[0, 0, :].astype(jnp.float32)
+    e = rows.shape[0]
+    pr = (rows[:, None] == jax.lax.broadcasted_iota(jnp.int32, (e, bk), 1))
+    pc = (cols[:, None] == jax.lax.broadcasted_iota(jnp.int32, (e, bn), 1))
+    pr_v = pr.astype(jnp.float32) * v[:, None]           # diag(v) folded in
+    w = w + jax.lax.dot(pr_v.T, pc.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    # consume the tile immediately: (bm, bk) @ (bk, bn)
+    o_ref[...] += jax.lax.dot(x_ref[...], w.astype(x_ref.dtype),
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bk", "bn",
+                                             "interpret"))
+def sl_matmul(x, B, A, v_t, rows_t, cols_t, *, scale: float,
+              bm: int = 128, bk: int = 128, bn: int = 128,
+              interpret: bool = True):
+    """x (M,K) @ (scale·B(K,r)·A(r,N) ⊕ V) → (M,N) in x.dtype.
+
+    v_t/rows_t/cols_t: (K/bk, N/bn, E) tile-CSR arrays from
+    ``ops.prepare_tiles`` (E = padded per-tile capacity, pad v = 0).
+    Shapes must be pre-padded to tile multiples (ops.py handles this).
+    """
+    m, k = x.shape
+    n = A.shape[1]
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n)
+    assert rows_t.shape[:2] == (k // bk, n // bn), rows_t.shape
+    grid = (m // bm, n // bn, k // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, B.shape[1]), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((A.shape[0], bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, 1, v_t.shape[-1]), lambda i, j, kk: (kk, j, 0)),
+            pl.BlockSpec((1, 1, rows_t.shape[-1]), lambda i, j, kk: (kk, j, 0)),
+            pl.BlockSpec((1, 1, cols_t.shape[-1]), lambda i, j, kk: (kk, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, B, A, v_t, rows_t, cols_t)
+    return out.astype(x.dtype)

@@ -1,0 +1,69 @@
+"""Sparse-only decode matmul kernel: y = x @ S  (DESIGN §3 beyond-paper).
+
+Decode is weight-bound: the densify path reads 2 B/cell of W per step
+(d_in·d_out·2 bytes). This kernel reads only the tile-CSR support —
+v (4 B) + rows/cols (8 B) per NONZERO — i.e. 12·δ bytes/cell ≈ 0.36 B/cell
+at δ=0.03, a 5.5× cut of the decode HBM term for the sparse component.
+Combined with the factored low-rank part ((x·B)·A, plain XLA dots reading
+(d_in+d_out)·r·2 bytes), the full SLTrain decode read shrinks by the
+parameter-compression ratio — the serve_step "sparse" exec mode.
+
+Body = the scatter-as-matmul of sl_matmul without the BA term: per (k, n)
+tile build S_tile = P_rᵀ·diag(v)·P_c in VMEM (two one-hot MXU matmuls) and
+immediately contract with x. S never exists in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, v_ref, r_ref, c_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    bk = x_ref.shape[1]
+    bn = o_ref.shape[1]
+    rows = r_ref[0, 0, :]
+    cols = c_ref[0, 0, :]
+    v = v_ref[0, 0, :].astype(jnp.float32)
+    e = rows.shape[0]
+    pr = (rows[:, None] == jax.lax.broadcasted_iota(jnp.int32, (e, bk), 1))
+    pc = (cols[:, None] == jax.lax.broadcasted_iota(jnp.int32, (e, bn), 1))
+    s_tile = jax.lax.dot((pr.astype(jnp.float32) * v[:, None]).T,
+                         pc.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+    o_ref[...] += jax.lax.dot(x_ref[...].astype(jnp.float32), s_tile,
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def sparse_matmul(x, v_t, rows_t, cols_t, *, bm: int = 8, bk: int = 128,
+                  bn: int = 128, interpret: bool = True):
+    """y = x @ S for tile-CSR S; x (M, K) pre-padded to tile multiples.
+    bm defaults small — decode batches are 1–128 rows."""
+    m, k = x.shape
+    nkt, nnt, e = rows_t.shape
+    n = nnt * bn
+    assert m % bm == 0 and k % bk == 0, (m, k)
+    grid = (m // bm, nnt, nkt)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((1, 1, e), lambda i, j, kk: (kk, j, 0)),
+            pl.BlockSpec((1, 1, e), lambda i, j, kk: (kk, j, 0)),
+            pl.BlockSpec((1, 1, e), lambda i, j, kk: (kk, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, v_t, rows_t, cols_t)
+    return out.astype(x.dtype)

@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede every other import: jax locks device count at first init.
+"""Multi-pod dry-run (deliverable (e)): AOT-lower + compile train_step /
+serve_step for every (architecture × input-shape) cell on the production
+meshes — 16×16 = 256 chips single-pod and 2×16×16 = 512 chips multi-pod —
+with 512 placeholder host devices. No arrays are ever allocated: parameters,
+optimizer state, caches and batches are all ShapeDtypeStructs.
+
+Per cell it prints/records compiled.memory_analysis() (proves fit),
+cost_analysis() (FLOPs/bytes for §Roofline) and the collective wire bytes
+parsed from the post-SPMD HLO (DESIGN §6).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi_34b --cell train_4k
+  python -m repro.launch.dryrun --arch yi_34b --cell train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out results.jsonl
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as roofline_lib
+from repro.configs.base import SHAPE_CELLS, OptimizerConfig, ShapeCell
+from repro.dist import sharding as sharding_lib
+from repro.launch import specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.optim import optimizers
+from repro.train import step as step_lib
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
+               remat: str = "none", mesh=None, cfg_overrides=None,
+               verbose: bool = True):
+    """Lower + compile one (arch × cell) on the production mesh. Returns a
+    result dict (memory analysis, cost analysis, roofline terms)."""
+    cfg_overrides = dict(cfg_overrides or {})
+    param_mode = cfg_overrides.pop("param_mode", None)
+    cfg = registry.get_config(arch, **cfg_overrides)
+    if param_mode:  # keep the arch's rank/delta/alpha, swap the mode only
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, param=dataclasses.replace(cfg.param, mode=param_mode))
+    api = registry.get_api(cfg)
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    chips = mesh.devices.size
+    batch_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+    params_abs, consts_abs = api.init(cfg, key=None)      # abstract init
+    p_specs = sharding_lib.param_specs(params_abs, mesh)
+    c_specs = sharding_lib.param_specs(consts_abs, mesh)
+
+    t0 = time.time()
+    if cell.kind in ("train", "prefill"):
+        batch_abs = specs.input_specs(cfg, cell.global_batch, cell.seq_len,
+                                      abstract=True)
+        b_specs = sharding_lib.batch_specs(batch_abs, mesh, batch_axes)
+        if cell.kind == "train":
+            oc = OptimizerConfig()
+            opt = optimizers.make(oc)
+            opt_abs = jax.eval_shape(opt.init, params_abs)
+            o_specs = sharding_lib.opt_state_specs(opt_abs, p_specs, mesh)
+            fn = step_lib.make_train_step(cfg, api, opt, remat=remat)
+            jfn = jax.jit(
+                fn,
+                in_shardings=(_ns(mesh, p_specs), _ns(mesh, o_specs),
+                              _ns(mesh, c_specs), _ns(mesh, b_specs)),
+                out_shardings=(_ns(mesh, p_specs), _ns(mesh, o_specs), None),
+            )
+            with mesh:
+                lowered = jfn.lower(params_abs, opt_abs, consts_abs, batch_abs)
+        else:  # prefill: loss-less forward
+            def prefill(params, consts, batch):
+                logits, _ = api.apply(cfg, params, consts, batch, remat=remat)
+                return logits
+            jfn = jax.jit(
+                prefill,
+                in_shardings=(_ns(mesh, p_specs), _ns(mesh, c_specs),
+                              _ns(mesh, b_specs)),
+            )
+            with mesh:
+                lowered = jfn.lower(params_abs, consts_abs, batch_abs)
+        n_tokens = cell.global_batch * cell.seq_len
+        kind = "train" if cell.kind == "train" else "prefill"
+    else:  # decode / long_decode: one new token against a seq_len cache
+        cache_abs = api.init_cache(cfg, cell.global_batch, cell.seq_len,
+                                   abstract=True)
+        k_specs = sharding_lib.cache_specs(cache_abs, mesh,
+                                           batch_axes=batch_axes)
+        tokens_abs, index_abs = specs.decode_inputs(
+            cfg, cell.global_batch, cell.seq_len, abstract=True)
+        b_spec = sharding_lib.batch_specs({"t": tokens_abs}, mesh,
+                                          batch_axes)["t"]
+        fn = step_lib.make_serve_step(cfg, api)
+        jfn = jax.jit(
+            fn,
+            in_shardings=(_ns(mesh, p_specs), _ns(mesh, c_specs),
+                          NamedSharding(mesh, b_spec), _ns(mesh, k_specs),
+                          None),
+            out_shardings=(NamedSharding(mesh, b_spec), None,
+                           _ns(mesh, k_specs)),
+        )
+        with mesh:
+            lowered = jfn.lower(params_abs, consts_abs, tokens_abs,
+                                cache_abs, index_abs)
+        n_tokens = cell.global_batch
+        kind = "decode"
+
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    mf = roofline_lib.model_flops(cfg, n_tokens, kind)
+    rl = roofline_lib.from_compiled(compiled, chips, model_flops=mf)
+
+    result = {
+        "arch": arch, "cell": cell.name, "multi_pod": multi_pod,
+        "chips": chips, "remat": remat, "compile_s": round(compile_s, 1),
+        "bytes_per_device": {
+            "argument": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak": int(getattr(mem, "argument_size_in_bytes", 0))
+            + int(getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "roofline": rl.row(),
+        "collectives": {
+            "counts": rl.collectives.counts,
+            "wire_GB": {k: v / 1e9 for k, v in
+                        rl.collectives.wire_bytes.items()},
+        },
+    }
+    if verbose:
+        bpd = result["bytes_per_device"]
+        r = result["roofline"]
+        print(f"[{arch} × {cell.name} | {'2-pod' if multi_pod else '1-pod'}"
+              f" {chips}c] compile {compile_s:.0f}s  "
+              f"args {bpd['argument']/2**30:.2f}GiB "
+              f"temp {bpd['temp']/2**30:.2f}GiB/dev")
+        print(f"  roofline: t_c={r['t_compute_s']:.4f}s "
+              f"t_m={r['t_memory_s']:.4f}s t_x={r['t_collective_s']:.4f}s "
+              f"-> {r['bottleneck']}-bound, frac={r['roofline_fraction']:.2f} "
+              f"useful={r['useful_ratio']:.2f}")
+        print(f"  collectives: {result['collectives']['counts']}")
+    return result
+
+
+def iter_cells(archs=None):
+    archs = archs or registry.ARCHS
+    for arch in archs:
+        for cell in SHAPE_CELLS:
+            if registry.cell_applicable(arch, cell.name):
+                yield arch, cell
+            else:
+                print(f"[skip] {arch} × {cell.name}: "
+                      f"{registry.skip_reason(arch, cell.name)}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-shard the residual stream (§Perf it.2)")
+    ap.add_argument("--mode", default=None,
+                    help="override param mode (dense/lowrank/sltrain)")
+    ap.add_argument("--tag", default=None, help="label stored in the result")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args(argv)
+
+    cells = {c.name: c for c in SHAPE_CELLS}
+    todo = []
+    if args.all:
+        for arch, cell in iter_cells():
+            todo.append((arch, cell, False))
+            todo.append((arch, cell, True))
+    else:
+        assert args.arch and args.cell, "--arch and --cell (or --all)"
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for mp in meshes:
+            todo.append((args.arch, cells[args.cell], mp))
+
+    overrides = {}
+    if args.sp:
+        overrides["seq_shard_activations"] = True
+    if args.mode:
+        overrides["param_mode"] = args.mode
+
+    failures = []
+    for arch, cell, mp in todo:
+        try:
+            res = lower_cell(arch, cell, multi_pod=mp, remat=args.remat,
+                             cfg_overrides=overrides or None)
+            if args.tag:
+                res["tag"] = args.tag
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(res) + "\n")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, cell.name, mp, repr(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print(f"\nall {len(todo)} dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

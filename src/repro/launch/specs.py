@@ -1,0 +1,58 @@
+"""Input stand-ins: ShapeDtypeStruct specs for the dry-run (no allocation)
+and concrete random batches for smoke tests / real training.
+
+Modality frontends are STUBS (DESIGN §5): whisper gets precomputed frame
+embeddings, paligemma gets precomputed patch embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+
+def input_specs(cfg: ModelConfig, batch: int, seq: int, abstract: bool = True,
+                key=None):
+    """Training/prefill batch for one model. Returns a dict pytree."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def tok(shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, jnp.int32)
+        k = key if key is not None else jax.random.PRNGKey(0)
+        return jax.random.randint(k, shape, 0, cfg.vocab_size, jnp.int32)
+
+    def emb(shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        k = key if key is not None else jax.random.PRNGKey(1)
+        return (jax.random.normal(k, shape, jnp.float32) * 0.02).astype(dt)
+
+    batch_dict = {"tokens": tok((batch, seq))}
+    if cfg.family == "whisper":
+        batch_dict["frames"] = emb((batch, cfg.encoder_seq, cfg.d_model))
+    elif cfg.family == "vlm":
+        n = min(cfg.n_patches, seq)
+        batch_dict["patches"] = emb((batch, n, cfg.d_model))
+    return batch_dict
+
+
+def decode_inputs(cfg: ModelConfig, batch: int, cache_len: int,
+                  abstract: bool = True, key=None):
+    """(tokens, index) for one serve_step against a cache of cache_len."""
+    if abstract:
+        tokens = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        index = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        k = key if key is not None else jax.random.PRNGKey(2)
+        tokens = jax.random.randint(k, (batch, 1), 0, cfg.vocab_size, jnp.int32)
+        index = jnp.int32(cache_len - 1)
+    return tokens, index
+
+
+def cell_batch(cfg: ModelConfig, cell: ShapeCell, abstract: bool = True):
+    """Materialize the assigned shape cell for this arch."""
+    if cell.kind in ("train", "prefill"):
+        return input_specs(cfg, cell.global_batch, cell.seq_len, abstract)
+    return None  # decode cells use decode_inputs + the model's init_cache

@@ -1,0 +1,94 @@
+"""Training launcher (deliverable (b) driver).
+
+CPU-scale by default: pick an arch (full or smoke config), a small batch,
+and run the fault-tolerant Trainer on the synthetic C4 pipeline. On a real
+TPU fleet the same entrypoint runs under `jax.distributed` with the
+production mesh; here the mesh is the single-device local mesh.
+
+Usage:
+  python -m repro.launch.train --arch llama_60m --smoke --steps 200
+  python -m repro.launch.train --arch llama_60m --smoke --mode dense   # baseline
+  python -m repro.launch.train --arch yi_34b --smoke --optimizer adam8bit
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs.base import (OptimizerConfig, ShardingConfig, TrainConfig,
+                                ParamConfig)
+from repro.models import registry
+from repro.train.trainer import Trainer
+
+
+def build_train_config(args) -> TrainConfig:
+    cfg = (registry.get_smoke_config(args.arch) if args.smoke
+           else registry.get_config(args.arch))
+    if args.mode:
+        cfg = dataclasses.replace(
+            cfg, param=dataclasses.replace(cfg.param, mode=args.mode))
+    if args.delta is not None:
+        cfg = dataclasses.replace(
+            cfg, param=dataclasses.replace(cfg.param, delta=args.delta))
+    if args.rank is not None:
+        cfg = dataclasses.replace(
+            cfg, param=dataclasses.replace(cfg.param, rank=args.rank))
+    oc = OptimizerConfig(name=args.optimizer, lr=args.lr,
+                         warmup_steps=max(1, args.steps // 10),
+                         total_steps=args.steps)
+    sc = ShardingConfig(remat=args.remat, grad_accum=args.grad_accum)
+    return TrainConfig(model=cfg, optim=oc, sharding=sc, seed=args.seed,
+                       global_batch=args.batch, seq_len=args.seq,
+                       steps=args.steps, log_every=args.log_every,
+                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama_60m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--mode", default=None,
+                    choices=[None, "dense", "lowrank", "sltrain", "relora"])
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adam8bit", "galore_adamw"])
+    ap.add_argument("--delta", type=float, default=None)
+    ap.add_argument("--rank", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--multipod", action="store_true",
+                    help="initialize jax.distributed from JAX_* env vars "
+                         "(scripts/launch_multipod.sh sets them)")
+    args = ap.parse_args(argv)
+
+    if args.multipod:
+        import os
+        import jax
+        jax.distributed.initialize(
+            coordinator_address=os.environ["JAX_COORDINATOR_ADDRESS"],
+            num_processes=int(os.environ["JAX_NUM_PROCESSES"]),
+            process_id=int(os.environ["JAX_PROCESS_ID"]))
+
+    tc = build_train_config(args)
+    trainer = Trainer(tc)
+    state = trainer.run()
+    print(f"final step {state.step}: "
+          f"loss={trainer.metrics_history[-1]['loss']:.4f}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(trainer.metrics_history, f)
+    return trainer
+
+
+if __name__ == "__main__":
+    main()

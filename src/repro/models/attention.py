@@ -1,0 +1,149 @@
+"""GQA attention with RoPE, sliding windows, logit softcap, QK-norm, KV cache.
+
+Prefill/train uses a q-chunked attention (scan over query blocks, full-K
+scores per block) so the score transient is O(chunk·S) not O(S²) — required
+for the 32k-prefill dry-run cells to fit HBM (DESIGN §6).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (Builder, apply_linear, constrain, rms_norm,
+                                 rope, softcap)
+
+
+def init_attention(b: Builder, cfg: ModelConfig, cross: bool = False):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    params, consts = {}, {}
+    for name, d_out in (("wq", nh * hd), ("wk", nkv * hd), ("wv", nkv * hd)):
+        p, c = b.linear(name, d, d_out, adapted=True, bias=cfg.qkv_bias)
+        params[name] = p
+        if c:
+            consts[name] = c
+    p, c = b.linear("wo", nh * hd, d, adapted=True)
+    params["wo"] = p
+    if c:
+        consts["wo"] = c
+    if cfg.qk_norm:
+        params["q_norm"] = b.tensor("q_norm", (hd,), "ones")
+        params["k_norm"] = b.tensor("k_norm", (hd,), "ones")
+    return params, consts
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(*x.shape[:-1], n_heads, head_dim)
+
+
+def _attend(cfg: ModelConfig, q, k, v, q_pos, k_pos, *, causal, window,
+            q_chunk: int = 1024):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,Hkv,hd); positions: (Sq,), (Sk,)."""
+    bsz, sq, nh, hd = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    group = nh // nkv
+    scale = (cfg.query_pre_attn_scalar or hd) ** -0.5
+    qg = q.reshape(bsz, sq, nkv, group, hd)
+    # SP layout (§Perf it.4): q stays sequence-sharded over "model"; k/v are
+    # gathered once (the only per-layer collective); the score tensor is
+    # PINNED to q-seq sharding so GSPMD never replicates it (the involuntary
+    # full-rematerialization path it otherwise takes for indivisible heads).
+    # Decode (sq == 1) is excluded: pinning k/v replicated would undo the
+    # seq-sharded KV cache (§Perf C) and re-gather it every step.
+    sp = cfg.seq_shard_activations and sq > 1
+    batch = ("pod", "data")
+    if sp:
+        qg = constrain(qg, batch, "model", None, None, None)
+        k = constrain(k, batch, None, None, None)
+        v = constrain(v, batch, None, None, None)
+
+    def block(q_blk, qpos_blk):
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk.astype(jnp.float32) * scale,
+                       k.astype(jnp.float32))
+        if sp:
+            s = constrain(s, batch, None, None, "model", None)
+        if cfg.attn_logit_softcap > 0:
+            s = softcap(s, cfg.attn_logit_softcap)
+        mask = jnp.ones((q_blk.shape[1], sk), dtype=bool)
+        if causal:
+            mask &= qpos_blk[:, None] >= k_pos[None, :]
+        if window > 0:
+            mask &= (qpos_blk[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        if sp:
+            p = constrain(p, batch, None, None, "model", None)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p,
+                       v.astype(jnp.float32)).astype(q.dtype)
+        if sp:
+            o = constrain(o, batch, "model", None, None, None)
+        return o
+
+    if sp or sq <= q_chunk:
+        # under SP the per-shard q length is already sq/|model|; chunking
+        # with lax.map would slice across the sharded dim and force gathers
+        o = block(qg, q_pos)
+    else:
+        n_blocks = (sq + q_chunk - 1) // q_chunk
+        pad = n_blocks * q_chunk - sq
+        qg_p = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        pos_p = jnp.pad(q_pos, (0, pad))
+        qg_b = qg_p.reshape(bsz, n_blocks, q_chunk, nkv, group, hd).swapaxes(0, 1)
+        pos_b = pos_p.reshape(n_blocks, q_chunk)
+        o = jax.lax.map(lambda args: block(*args), (qg_b, pos_b))
+        o = o.swapaxes(0, 1).reshape(bsz, n_blocks * q_chunk, nkv, group, hd)[:, :sq]
+    return o.reshape(bsz, sq, nh * hd)
+
+
+def apply_attention(cfg: ModelConfig, params, consts, x, *, pos_offset=0,
+                    causal: bool = True, window: int = 0,
+                    cache: Optional[dict] = None, cache_index=None,
+                    kv_source=None):
+    """Self- (or cross-, via kv_source) attention.
+
+    cache: {"k","v"} of shape (B, S_max, Hkv, hd); cache_index: scalar int —
+    decode writes k/v at cache_index and attends over the whole cache.
+    Returns (y, new_cache)."""
+    hd = cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    lin = lambda n, t: apply_linear(cfg, params[n], consts.get(n, {}), t)
+    bsz, sq = x.shape[0], x.shape[1]
+
+    q = _split_heads(lin("wq", x), nh, hd)
+    kv_in = x if kv_source is None else kv_source
+    k = _split_heads(lin("wk", kv_in), nkv, hd)
+    v = _split_heads(lin("wv", kv_in), nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+
+    q_pos = jnp.arange(sq, dtype=jnp.int32) + pos_offset
+    use_rope = cfg.family not in ("whisper",) and kv_source is None
+    if use_rope:
+        q = rope(q, q_pos[None], cfg.rope_theta)
+
+    new_cache = cache
+    if cache is not None and kv_source is None:
+        if use_rope:
+            k = rope(k, q_pos[None], cfg.rope_theta)
+        idx = cache_index if cache_index is not None else pos_offset
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        k_pos = jnp.arange(cache["k"].shape[1], dtype=jnp.int32)
+        q_pos = q_pos if cache_index is None else (jnp.arange(sq, dtype=jnp.int32) + cache_index)
+    elif kv_source is not None:
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    else:
+        if use_rope:
+            k = rope(k, q_pos[None], cfg.rope_theta)
+        k_pos = q_pos
+
+    o = _attend(cfg, q, k, v, q_pos, k_pos, causal=causal, window=window)
+    return lin("wo", o), new_cache

@@ -1,0 +1,285 @@
+"""Decoder-only LM covering the llama / qwen / yi / gemma2 / MoE / VLM
+families, with scan-over-layers (stacked params → O(1) HLO in depth) and a
+KV-cache decode path.
+
+Heterogeneous layer patterns (gemma2 local/global alternation, deepseek
+first-k-dense) are handled by scanning over *pattern periods*: the stacks
+are shaped (L/P, P, ...) and the P intra-period blocks are unrolled with
+static kinds, so the scan body stays uniform (DESIGN §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, mlp
+from repro.models.common import Builder, rms_norm, softcap, stack_layers
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _init_block(b: Builder, cfg: ModelConfig, use_moe: bool, d_ff_dense: int = 0):
+    params, consts = {}, {}
+    params["ln_attn"] = b.tensor("ln_attn", (cfg.d_model,), "zeros" if cfg.use_post_norms else "ones")
+    p, c = attention.init_attention(b.sub("attn"), cfg)
+    params["attn"] = p
+    if c:
+        consts["attn"] = c
+    params["ln_mlp"] = b.tensor("ln_mlp", (cfg.d_model,), "zeros" if cfg.use_post_norms else "ones")
+    if cfg.use_post_norms:
+        params["ln_attn_post"] = b.tensor("ln_attn_post", (cfg.d_model,), "zeros")
+        params["ln_mlp_post"] = b.tensor("ln_mlp_post", (cfg.d_model,), "zeros")
+    if use_moe:
+        p, c = mlp.init_moe(b.sub("moe"), cfg)
+        params["moe"] = p
+        if c:
+            consts["moe"] = c
+    else:
+        p, c = mlp.init_mlp(b.sub("mlp"), cfg, d_ff=d_ff_dense or cfg.d_ff)
+        params["mlp"] = p
+        if c:
+            consts["mlp"] = c
+    return params, consts
+
+
+def _apply_block(cfg: ModelConfig, p, c, x, *, window: int, cache=None,
+                 cache_index=None, pos_offset=0):
+    plus_one = cfg.family in ("gemma2", "vlm")
+    act = "gelu" if cfg.family in ("gemma2", "vlm") else "silu"
+    norm = lambda t, w: rms_norm(t, w, cfg.norm_eps, plus_one=plus_one)
+    h = norm(x, p["ln_attn"])
+    a, new_cache = attention.apply_attention(
+        cfg, p["attn"], c.get("attn", {}), h, pos_offset=pos_offset,
+        causal=True, window=window, cache=cache, cache_index=cache_index)
+    if cfg.use_post_norms:
+        a = norm(a, p["ln_attn_post"])
+    x = x + a
+    h = norm(x, p["ln_mlp"])
+    aux = jnp.float32(0.0)
+    if "moe" in p:
+        m, aux = mlp.apply_moe(cfg, p["moe"], c.get("moe", {}), h)
+    else:
+        m = mlp.apply_mlp(cfg, p["mlp"], c.get("mlp", {}), h, act=act)
+    if cfg.use_post_norms:
+        m = norm(m, p["ln_mlp_post"])
+    return x + m, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def _pattern(cfg: ModelConfig):
+    pat = cfg.attn_pattern or ("global",)
+    assert cfg.n_layers % len(pat) == 0 or cfg.moe.first_k_dense, \
+        f"{cfg.name}: n_layers {cfg.n_layers} not divisible by pattern {pat}"
+    return pat
+
+
+def init_lm(cfg: ModelConfig, key=None, seed: int = 0):
+    b = Builder(cfg, key, seed=seed)
+    params, consts = {}, {}
+    params["embed"] = b.tensor("embed", (cfg.padded_vocab, cfg.d_model),
+                               "normal", fan_in=cfg.d_model)
+    use_moe = cfg.moe.n_experts > 0
+    pat = _pattern(cfg)
+    n_dense = cfg.moe.first_k_dense if use_moe else 0
+    n_rest = cfg.n_layers - n_dense
+
+    if n_dense:
+        params["dense_layers"], cd = stack_layers(
+            b.sub("dense"), lambda bb: _init_block(bb, cfg, False, cfg.moe.d_ff_dense),
+            n_dense, "dl")
+        if cd:
+            consts["dense_layers"] = cd
+
+    period = len(pat)
+    assert n_rest % period == 0
+
+    def init_period(bb: Builder):
+        ps, cs = [], []
+        for j, kind in enumerate(pat):
+            p, c = _init_block(bb.sub(f"k{j}"), cfg, use_moe)
+            ps.append(p)
+            cs.append(c)
+        return {f"k{j}": ps[j] for j in range(period)}, \
+               {f"k{j}": cs[j] for j in range(period) if cs[j]}
+
+    params["layers"], cl = stack_layers(b.sub("blocks"), init_period,
+                                        n_rest // period, "p")
+    if cl:
+        consts["layers"] = cl
+    params["ln_f"] = b.tensor("ln_f", (cfg.d_model,),
+                              "zeros" if cfg.family in ("gemma2", "vlm") else "ones")
+    if not cfg.tie_embeddings:
+        params["lm_head"] = b.tensor("lm_head", (cfg.d_model, cfg.padded_vocab),
+                                     "normal", fan_in=cfg.d_model)
+    return params, consts
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(cfg, params, tokens):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family in ("gemma2", "vlm"):
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+    return h
+
+
+def _unembed(cfg, params, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ w.astype(h.dtype)
+    if cfg.final_logit_softcap > 0:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits
+
+
+def _window_for(cfg, kind: str) -> int:
+    return cfg.sliding_window if kind == "local" else 0
+
+
+def _sp_constraint(cfg, h):
+    """Sequence-parallel residual constraint (§Perf): shard (B, S, d) as
+    P(batch_axes, "model", None) when the ambient mesh has those axes and
+    the dims divide. No-op on meshes without a model axis (CPU tests)."""
+    if not cfg.seq_shard_activations:
+        return h
+    axes = ()
+    try:  # new-style ambient mesh (jax.sharding.use_mesh)
+        mesh = jax.sharding.get_abstract_mesh()
+        axes = mesh.axis_names
+    except Exception:
+        pass
+    if not axes:
+        try:  # legacy `with mesh:` context
+            from jax._src.mesh import thread_resources
+            mesh = thread_resources.env.physical_mesh
+            axes = mesh.axis_names
+        except Exception:
+            return h
+    if not axes or "model" not in axes:
+        return h
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    import numpy as _np
+    nb = int(_np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes else 1
+    nm = mesh.shape["model"]
+    if h.shape[0] % max(nb, 1) or h.shape[1] % nm:
+        return h
+    from jax.sharding import PartitionSpec as _P
+    spec = _P(batch_axes if batch_axes else None, "model", None)
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+def apply_lm(cfg: ModelConfig, params, consts, tokens, *, patch_embeds=None,
+             remat: str = "none"):
+    """tokens: (B, S[, ]) int32 → (logits (B, S, V), aux losses).
+
+    For VLM, patch_embeds (B, n_patches, d) replace the first n_patches
+    positions (the stub frontend's output, DESIGN §5)."""
+    h = _embed_tokens(cfg, params, tokens)
+    if patch_embeds is not None:
+        h = jnp.concatenate([patch_embeds.astype(h.dtype),
+                             h[:, patch_embeds.shape[1]:]], axis=1)
+    pat = _pattern(cfg)
+    aux_total = jnp.float32(0.0)
+
+    def period_body(x, layer):
+        p, c = layer
+        aux = jnp.float32(0.0)
+        for j, kind in enumerate(pat):
+            x, _, a = _apply_block(cfg, p[f"k{j}"], c.get(f"k{j}", {}), x,
+                                   window=_window_for(cfg, kind))
+            aux = aux + a
+        return _sp_constraint(cfg, x), aux
+
+    if remat != "none":
+        policy = None if remat == "full" else \
+            jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        period_body = jax.checkpoint(period_body, policy=policy)
+
+    if "dense_layers" in params:
+        def dense_body(x, layer):
+            p, c = layer
+            x, _, a = _apply_block(cfg, p, c, x, window=0)
+            return x, a
+        h, aux_d = jax.lax.scan(dense_body, h,
+                                (params["dense_layers"],
+                                 consts.get("dense_layers", {})))
+        aux_total = aux_total + aux_d.sum()
+
+    h, aux = jax.lax.scan(period_body, h,
+                          (params["layers"], consts.get("layers", {})))
+    aux_total = aux_total + aux.sum()
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps,
+                 plus_one=cfg.family in ("gemma2", "vlm"))
+    return _unembed(cfg, params, h), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, abstract: bool = False):
+    hd = cfg.resolved_head_dim
+    pat = _pattern(cfg)
+    n_periods = (cfg.n_layers - (cfg.moe.first_k_dense or 0)) // len(pat)
+    dt = jnp.dtype(cfg.dtype)
+
+    def mk(shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    kv = lambda lead: {"k": mk(lead + (batch, max_len, cfg.n_kv_heads, hd)),
+                       "v": mk(lead + (batch, max_len, cfg.n_kv_heads, hd))}
+    cache = {"layers": {f"k{j}": kv((n_periods,)) for j in range(len(pat))}}
+    if cfg.moe.first_k_dense:
+        cache["dense_layers"] = kv((cfg.moe.first_k_dense,))
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, consts, tokens, cache, index):
+    """One decode step. tokens: (B, 1) int32; index: scalar position.
+    Returns (logits (B, 1, V), new_cache)."""
+    h = _embed_tokens(cfg, params, tokens)
+    pat = _pattern(cfg)
+
+    if "dense_layers" in params:
+        def dense_body(x, layer):
+            p, c, kv = layer
+            x, nkv, _ = _apply_block(cfg, p, c, x, window=0, cache=kv,
+                                     cache_index=index)
+            return x, nkv
+        h, new_kv = jax.lax.scan(dense_body, h,
+                                 (params["dense_layers"],
+                                  consts.get("dense_layers", {}),
+                                  cache["dense_layers"]))
+        cache = {**cache, "dense_layers": new_kv}
+
+    def period_body(x, layer):
+        p, c, kv = layer
+        new_kv = {}
+        for j, kind in enumerate(pat):
+            x, nk, _ = _apply_block(cfg, p[f"k{j}"], c.get(f"k{j}", {}), x,
+                                    window=_window_for(cfg, kind),
+                                    cache=kv[f"k{j}"], cache_index=index)
+            new_kv[f"k{j}"] = nk
+        return x, new_kv
+
+    h, new_layers = jax.lax.scan(period_body, h,
+                                 (params["layers"],
+                                  consts.get("layers", {}),
+                                  cache["layers"]))
+    cache = {**cache, "layers": new_layers}
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps,
+                 plus_one=cfg.family in ("gemma2", "vlm"))
+    return _unembed(cfg, params, h), cache

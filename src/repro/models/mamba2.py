@@ -1,0 +1,342 @@
+"""Mamba2 (SSD) mixer + the zamba2-style hybrid model.
+
+The SSD scan is the *chunked matmul* formulation (Mamba-2 paper §6) — intra-
+chunk work is dense einsums (MXU-friendly on TPU, the hardware adaptation
+DESIGN §3 calls for) and the inter-chunk recurrence is a tiny lax.scan over
+S/chunk states.
+
+zamba2 hybrid: runs of `hybrid_attn_every` mamba blocks followed by an
+invocation of ONE weight-shared attention+MLP block with per-invocation
+low-rank adapters (that is zamba2's actual design — pleasantly, the same
+low-rank idea the paper builds on), consuming concat(hidden, embeddings).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, mlp
+from repro.models.common import Builder, apply_linear, rms_norm, silu, stack_layers
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _segsum(x):
+    """x: (..., l) → (..., l, l) with out[i,j] = sum_{k=j+1..i} x_k, -inf above diag."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd(x, a_log, B, C, chunk: int):
+    """Chunked state-space dual scan.
+
+    x: (b, s, h, p) — inputs (already gated by dt); a_log: (b, s, h) — log
+    decay per step (dt * A, ≤ 0); B, C: (b, s, n) — shared across heads
+    (single group). Returns y: (b, s, h, p) and final state (b, h, p, n)."""
+    b, s_orig, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s_orig)
+    pad = (-s_orig) % chunk
+    if pad:
+        # zero x/B/C contribute nothing; a_log=0 → decay 1 (harmless)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a_log.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)      # (b,h,c,l)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                                 # (b,h,c,l)
+    L = jnp.exp(_segsum(ac))                                        # (b,h,c,l,l)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        Cc, Bc, L.astype(jnp.float32), xc.astype(jnp.float32))
+
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)                 # (b,h,c,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states,
+                        xc.astype(jnp.float32))                     # (b,c,h,p,n)
+    chunk_decay = jnp.exp(a_cum[..., -1])                           # (b,h,c)
+
+    def scan_fn(carry, xs):
+        st, dec = xs                                                # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                           # emit PREV state
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init, (states.transpose(1, 0, 2, 3, 4),
+                        chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)              # (b,c,h,p,n)
+
+    state_decay = jnp.exp(a_cum)                                    # (b,h,c,l)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p).astype(x.dtype)
+    return y[:, :s_orig], final
+
+
+def ssd_step(state, x_t, a_log_t, B_t, C_t):
+    """Single-token recurrence. state: (b,h,p,n); x_t: (b,h,p);
+    a_log_t: (b,h); B_t, C_t: (b,n)."""
+    dec = jnp.exp(a_log_t)[..., None, None]
+    upd = jnp.einsum("bhp,bn->bhpn", x_t.astype(jnp.float32),
+                     B_t.astype(jnp.float32))
+    new = state * dec + upd
+    y = jnp.einsum("bhpn,bn->bhp", new, C_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    h = d_inner // sc.head_dim
+    return d_inner, h, sc.state_dim, sc.conv_width
+
+
+def init_mamba_block(b: Builder, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, h, n, cw = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    params, consts = {}, {}
+    params["ln"] = b.tensor("ln", (d,), "ones")
+    p, c = b.linear("in_proj", d, 2 * d_inner + 2 * n + h)
+    params["in_proj"] = p
+    if c:
+        consts["in_proj"] = c
+    params["conv_w"] = b.tensor("conv_w", (cw, conv_dim), "normal", fan_in=cw)
+    params["conv_b"] = b.tensor("conv_b", (conv_dim,), "zeros")
+    params["A_log"] = b.tensor("A_log", (h,), "ones", dtype=jnp.float32)
+    params["dt_bias"] = b.tensor("dt_bias", (h,), "zeros", dtype=jnp.float32)
+    params["D"] = b.tensor("D", (h,), "ones", dtype=jnp.float32)
+    params["out_norm"] = b.tensor("out_norm", (d_inner,), "ones")
+    p, c = b.linear("out_proj", d_inner, d)
+    params["out_proj"] = p
+    if c:
+        consts["out_proj"] = c
+    return params, consts
+
+
+def _conv1d(x, w, bias, state=None):
+    """Causal depthwise conv. x: (b, s, c); w: (cw, c). If state (b, cw-1, c)
+    is given, runs in streaming mode and returns (y, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(cw))
+    y = y + bias[None, None]
+    new_state = pad[:, -(cw - 1):, :] if state is not None else None
+    return y, new_state
+
+
+def apply_mamba_block(cfg: ModelConfig, p, c, x, *, cache=None):
+    """cache: {"conv": (b, cw-1, conv_dim), "ssm": (b, h, p, n)} for decode."""
+    d_inner, h, n, cw = _dims(cfg)
+    hd = cfg.ssm.head_dim
+    res = x
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = apply_linear(cfg, p["in_proj"], c.get("in_proj", {}), xn)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _conv1d(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = silu(xbc)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (b,s,h)
+    a = -jnp.exp(p["A_log"])                                         # (h,)
+    a_log = dt * a                                                   # (b,s,h)
+    xh = xs.reshape(*xs.shape[:-1], h, hd)
+    xh_dt = xh.astype(jnp.float32) * dt[..., None]
+
+    if cache is None:
+        y, _ = ssd(xh_dt.astype(x.dtype), a_log, B, C, cfg.ssm.chunk)
+        new_cache = None
+    else:
+        y_t, new_ssm = ssd_step(cache["ssm"], xh_dt[:, 0], a_log[:, 0],
+                                B[:, 0], C[:, 0])
+        y = y_t[:, None]
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": new_ssm}
+    y = y + (p["D"][None, None, :, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(*y.shape[:-2], d_inner)
+    y = rms_norm(y * silu(z).astype(y.dtype), p["out_norm"], cfg.norm_eps)
+    out = apply_linear(cfg, p["out_proj"], c.get("out_proj", {}), y.astype(x.dtype))
+    return res + out.astype(res.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# zamba2 hybrid model
+# ---------------------------------------------------------------------------
+
+def _hybrid_counts(cfg: ModelConfig):
+    per = cfg.hybrid_attn_every
+    n_super = cfg.n_layers // per
+    tail = cfg.n_layers - n_super * per
+    return per, n_super, tail
+
+
+def init_hybrid(cfg: ModelConfig, key=None, seed: int = 0):
+    b = Builder(cfg, key, seed=seed)
+    per, n_super, tail = _hybrid_counts(cfg)
+    params, consts = {}, {}
+    params["embed"] = b.tensor("embed", (cfg.padded_vocab, cfg.d_model),
+                               "normal", fan_in=cfg.d_model)
+
+    def super_block(bb: Builder):
+        ps, cs = stack_layers(bb, lambda b2: init_mamba_block(b2, cfg), per, "m")
+        out_p = {"mamba": ps}
+        out_c = {"mamba": cs} if cs else {}
+        # per-invocation low-rank adapter on the shared block input proj
+        r = max(8, cfg.param.rank // 2)
+        out_p["adapter"] = {
+            "B": bb.tensor("adB", (2 * cfg.d_model, r), "zeros"),
+            "A": bb.tensor("adA", (r, cfg.d_model), "kaiming", fan_in=2 * cfg.d_model),
+        }
+        return out_p, out_c
+
+    params["supers"], cs = stack_layers(b.sub("supers"), super_block, n_super, "s")
+    if cs:
+        consts["supers"] = cs
+    if tail:
+        params["tail"], ct = stack_layers(
+            b.sub("tail"), lambda b2: init_mamba_block(b2, cfg), tail, "m")
+        if ct:
+            consts["tail"] = ct
+
+    # ONE shared attention+MLP block (weights reused at every invocation)
+    sb = b.sub("shared_attn")
+    shared, shared_c = {}, {}
+    p, c = sb.linear("in_proj", 2 * cfg.d_model, cfg.d_model)
+    shared["in_proj"] = p
+    if c:
+        shared_c["in_proj"] = c
+    shared["ln"] = sb.tensor("ln", (2 * cfg.d_model,), "ones")
+    p, c = attention.init_attention(sb.sub("attn"), cfg)
+    shared["attn"] = p
+    if c:
+        shared_c["attn"] = c
+    shared["ln_mlp"] = sb.tensor("ln_mlp", (cfg.d_model,), "ones")
+    p, c = mlp.init_mlp(sb.sub("mlp"), cfg)
+    shared["mlp"] = p
+    if c:
+        shared_c["mlp"] = c
+    params["shared"] = shared
+    if shared_c:
+        consts["shared"] = shared_c
+    params["ln_f"] = b.tensor("ln_f", (cfg.d_model,), "ones")
+    if not cfg.tie_embeddings:
+        params["lm_head"] = b.tensor("lm_head", (cfg.d_model, cfg.padded_vocab),
+                                     "normal", fan_in=cfg.d_model)
+    return params, consts
+
+
+def _apply_shared(cfg, shared, shared_c, adapter, x, h0, *, cache=None,
+                  cache_index=None, pos_offset=0):
+    cat = jnp.concatenate([x, h0], axis=-1)
+    catn = rms_norm(cat, shared["ln"], cfg.norm_eps)
+    inp = apply_linear(cfg, shared["in_proj"], shared_c.get("in_proj", {}), catn)
+    inp = inp + ((catn @ adapter["B"]) @ adapter["A"]).astype(inp.dtype)
+    a, new_cache = attention.apply_attention(
+        cfg, shared["attn"], shared_c.get("attn", {}), inp, causal=True,
+        cache=cache, cache_index=cache_index, pos_offset=pos_offset)
+    x = x + a
+    m = mlp.apply_mlp(cfg, shared["mlp"], shared_c.get("mlp", {}),
+                      rms_norm(x, shared["ln_mlp"], cfg.norm_eps))
+    return x + m, new_cache
+
+
+def apply_hybrid(cfg: ModelConfig, params, consts, tokens, *, remat: str = "none"):
+    per, n_super, tail = _hybrid_counts(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h0 = h
+
+    def super_body(carry, layer):
+        x = carry
+        p, c = layer
+        def inner(x, m_layer):
+            mp, mc = m_layer
+            x, _ = apply_mamba_block(cfg, mp, mc, x)
+            return x, None
+        x, _ = jax.lax.scan(inner, x, (p["mamba"], c.get("mamba", {})))
+        x, _ = _apply_shared(cfg, params["shared"], consts.get("shared", {}),
+                             p["adapter"], x, h0)
+        return x, None
+
+    if remat != "none":
+        super_body = jax.checkpoint(super_body)
+    h, _ = jax.lax.scan(super_body, h, (params["supers"], consts.get("supers", {})))
+    if tail:
+        def tail_body(x, m_layer):
+            mp, mc = m_layer
+            x, _ = apply_mamba_block(cfg, mp, mc, x)
+            return x, None
+        h, _ = jax.lax.scan(tail_body, h, (params["tail"], consts.get("tail", {})))
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ w.astype(h.dtype), jnp.float32(0.0)
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      abstract: bool = False):
+    d_inner, h, n, cw = _dims(cfg)
+    per, n_super, tail = _hybrid_counts(cfg)
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    mk = (lambda s, d=dt: jax.ShapeDtypeStruct(s, d)) if abstract else \
+         (lambda s, d=dt: jnp.zeros(s, d))
+    mamba = lambda lead: {"conv": mk(lead + (batch, cw - 1, d_inner + 2 * n)),
+                          "ssm": mk(lead + (batch, h, cfg.ssm.head_dim, n), jnp.float32)}
+    cache = {"supers": {"mamba": mamba((n_super, per)),
+                        "attn": {"k": mk((n_super, batch, max_len, cfg.n_kv_heads, hd)),
+                                 "v": mk((n_super, batch, max_len, cfg.n_kv_heads, hd))}}}
+    if tail:
+        cache["tail"] = mamba((tail,))
+    return cache
+
+
+def hybrid_decode_step(cfg: ModelConfig, params, consts, tokens, cache, index):
+    per, n_super, tail = _hybrid_counts(cfg)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h0 = h
+
+    def super_body(x, layer):
+        p, c, kv = layer
+        def inner(x, m_layer):
+            mp, mc, mcache = m_layer
+            x, ncache = apply_mamba_block(cfg, mp, mc, x, cache=mcache)
+            return x, ncache
+        x, new_mamba = jax.lax.scan(inner, x, (p["mamba"], c.get("mamba", {}),
+                                               kv["mamba"]))
+        x, new_attn = _apply_shared(cfg, params["shared"], consts.get("shared", {}),
+                                    p["adapter"], x, h0, cache=kv["attn"],
+                                    cache_index=index)
+        return x, {"mamba": new_mamba, "attn": new_attn}
+
+    h, new_supers = jax.lax.scan(super_body, h,
+                                 (params["supers"], consts.get("supers", {}),
+                                  cache["supers"]))
+    new_cache = {"supers": new_supers}
+    if tail:
+        def tail_body(x, m_layer):
+            mp, mc, mcache = m_layer
+            x, ncache = apply_mamba_block(cfg, mp, mc, x, cache=mcache)
+            return x, ncache
+        h, new_tail = jax.lax.scan(tail_body, h, (params["tail"],
+                                                  consts.get("tail", {}),
+                                                  cache["tail"]))
+        new_cache["tail"] = new_tail
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ w.astype(h.dtype), new_cache

@@ -1,0 +1,111 @@
+"""Uniform model API: every architecture exposes init / apply / init_cache /
+decode_step so the trainer, server, dry-run and tests are arch-agnostic."""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    init: Callable          # (cfg, key=None, seed=0) -> (params, consts)
+    apply: Callable         # (cfg, params, consts, batch, remat) -> (logits, aux)
+    init_cache: Callable    # (cfg, batch, max_len, abstract) -> cache
+    decode_step: Callable   # (cfg, params, consts, tokens, cache, index) -> (logits, cache)
+
+
+def _lm_api():
+    from repro.models import lm
+
+    def apply(cfg, params, consts, batch, remat="none"):
+        return lm.apply_lm(cfg, params, consts, batch["tokens"],
+                           patch_embeds=batch.get("patches"), remat=remat)
+
+    return ModelApi(lm.init_lm, apply, lm.init_cache, lm.decode_step)
+
+
+def _hybrid_api():
+    from repro.models import mamba2
+
+    def apply(cfg, params, consts, batch, remat="none"):
+        return mamba2.apply_hybrid(cfg, params, consts, batch["tokens"], remat=remat)
+
+    return ModelApi(mamba2.init_hybrid, apply, mamba2.init_hybrid_cache,
+                    mamba2.hybrid_decode_step)
+
+
+def _xlstm_api():
+    from repro.models import xlstm
+
+    def apply(cfg, params, consts, batch, remat="none"):
+        return xlstm.apply_xlstm(cfg, params, consts, batch["tokens"], remat=remat)
+
+    return ModelApi(xlstm.init_xlstm, apply, xlstm.init_xlstm_cache,
+                    xlstm.xlstm_decode_step)
+
+
+def _whisper_api():
+    from repro.models import whisper
+
+    def apply(cfg, params, consts, batch, remat="none"):
+        return whisper.apply_whisper(cfg, params, consts, batch["tokens"],
+                                     batch["frames"], remat=remat)
+
+    return ModelApi(whisper.init_whisper, apply, whisper.init_whisper_cache,
+                    whisper.whisper_decode_step)
+
+
+_FAMILY_API = {
+    "llama": _lm_api, "moe": _lm_api, "gemma2": _lm_api, "vlm": _lm_api,
+    "mamba_hybrid": _hybrid_api, "xlstm": _xlstm_api, "whisper": _whisper_api,
+}
+
+# arch id -> config module under repro.configs
+ARCHS = (
+    "qwen3_moe_235b", "deepseek_moe_16b", "yi_34b", "qwen2_5_32b", "gemma2_2b",
+    "llama3_405b", "paligemma_3b", "zamba2_7b", "xlstm_350m", "whisper_large_v3",
+)
+PAPER_ARCHS = ("llama_60m", "llama_130m", "llama_350m", "llama_1b", "llama_7b")
+
+
+def get_api(cfg: ModelConfig) -> ModelApi:
+    return _FAMILY_API[cfg.family]()
+
+
+def get_config(arch: str, **overrides) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    cfg: ModelConfig = mod.CONFIG
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.SMOKE
+
+
+# ---------------------------------------------------------------------------
+# Shape-cell applicability (skips per DESIGN §5)
+# ---------------------------------------------------------------------------
+
+_SUBQUADRATIC = {"zamba2_7b", "xlstm_350m"}
+
+
+def cell_applicable(arch: str, cell_name: str) -> bool:
+    if cell_name == "long_500k":
+        return arch in _SUBQUADRATIC
+    return True
+
+
+def skip_reason(arch: str, cell_name: str) -> Optional[str]:
+    if cell_applicable(arch, cell_name):
+        return None
+    return ("pure full-attention arch: 500k context needs sub-quadratic "
+            "attention (DESIGN §5 skip note)")

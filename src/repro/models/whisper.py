@@ -1,0 +1,166 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+The audio conv frontend is a STUB (per the assignment): `input_specs()`
+provides precomputed frame embeddings (B, encoder_seq, d_model). The
+backbone is faithful: LayerNorm (with bias), learned positions, GELU MLP,
+MHA with bias, decoder self-attn (cached) + cross-attn to encoder output
+(cross K/V cached at prefill). Shape cells apply `seq_len` to the decoder;
+the encoder always sees `encoder_seq` frames (DESIGN §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, mlp
+from repro.models.common import Builder, apply_linear, layer_norm, stack_layers
+
+
+def _ln(b: Builder, name: str, d: int):
+    return {"w": b.tensor(f"{name}_w", (d,), "ones"),
+            "b": b.tensor(f"{name}_b", (d,), "zeros")}
+
+
+def _apply_ln(p, x, eps):
+    return layer_norm(x, p["w"], p["b"], eps)
+
+
+def _init_enc_block(b: Builder, cfg: ModelConfig):
+    params, consts = {}, {}
+    params["ln1"] = _ln(b, "ln1", cfg.d_model)
+    p, c = attention.init_attention(b.sub("attn"), cfg)
+    params["attn"] = p
+    if c:
+        consts["attn"] = c
+    params["ln2"] = _ln(b, "ln2", cfg.d_model)
+    p, c = mlp.init_mlp(b.sub("mlp"), cfg, gated=False)
+    params["mlp"] = p
+    if c:
+        consts["mlp"] = c
+    return params, consts
+
+
+def _init_dec_block(b: Builder, cfg: ModelConfig):
+    params, consts = _init_enc_block(b, cfg)
+    params["ln_x"] = _ln(b, "ln_x", cfg.d_model)
+    p, c = attention.init_attention(b.sub("xattn"), cfg, cross=True)
+    params["xattn"] = p
+    if c:
+        consts["xattn"] = c
+    return params, consts
+
+
+def init_whisper(cfg: ModelConfig, key=None, seed: int = 0):
+    b = Builder(cfg, key, seed=seed)
+    d = cfg.d_model
+    params, consts = {}, {}
+    params["enc_pos"] = b.tensor("enc_pos", (cfg.encoder_seq, d), "normal", fan_in=d)
+    params["enc"], ce = stack_layers(b.sub("enc"),
+                                     lambda bb: _init_enc_block(bb, cfg),
+                                     cfg.encoder_layers, "e")
+    if ce:
+        consts["enc"] = ce
+    params["enc_ln"] = _ln(b, "enc_ln", d)
+    params["embed"] = b.tensor("embed", (cfg.padded_vocab, d), "normal", fan_in=d)
+    params["dec_pos"] = b.tensor("dec_pos", (cfg.max_seq_len, d), "normal", fan_in=d)
+    params["dec"], cd = stack_layers(b.sub("dec"),
+                                     lambda bb: _init_dec_block(bb, cfg),
+                                     cfg.n_layers, "d")
+    if cd:
+        consts["dec"] = cd
+    params["dec_ln"] = _ln(b, "dec_ln", d)
+    return params, consts
+
+
+def encode(cfg: ModelConfig, params, consts, frames):
+    """frames: (B, encoder_seq, d_model) stub embeddings → encoder output."""
+    h = frames + params["enc_pos"][None].astype(frames.dtype)
+
+    def body(x, layer):
+        p, c = layer
+        a, _ = attention.apply_attention(cfg, p["attn"], c.get("attn", {}),
+                                         _apply_ln(p["ln1"], x, cfg.norm_eps),
+                                         causal=False)
+        x = x + a
+        m = mlp.apply_mlp(cfg, p["mlp"], c.get("mlp", {}),
+                          _apply_ln(p["ln2"], x, cfg.norm_eps), act="gelu")
+        return x + m, None
+
+    h, _ = jax.lax.scan(body, h, (params["enc"], consts.get("enc", {})))
+    return _apply_ln(params["enc_ln"], h, cfg.norm_eps)
+
+
+def _dec_block(cfg, p, c, x, enc_out, *, cache=None, cache_index=None,
+               pos_offset=0):
+    a, new_kv = attention.apply_attention(
+        cfg, p["attn"], c.get("attn", {}), _apply_ln(p["ln1"], x, cfg.norm_eps),
+        causal=True, cache=cache, cache_index=cache_index, pos_offset=pos_offset)
+    x = x + a
+    xa, _ = attention.apply_attention(
+        cfg, p["xattn"], c.get("xattn", {}), _apply_ln(p["ln_x"], x, cfg.norm_eps),
+        causal=False, kv_source=enc_out)
+    x = x + xa
+    m = mlp.apply_mlp(cfg, p["mlp"], c.get("mlp", {}),
+                      _apply_ln(p["ln2"], x, cfg.norm_eps), act="gelu")
+    return x + m, new_kv
+
+
+def apply_whisper(cfg: ModelConfig, params, consts, tokens, frames, *,
+                  remat: str = "none"):
+    """Teacher-forced training forward: (logits (B, S, V), aux=0)."""
+    enc_out = encode(cfg, params, consts, frames)
+    s = tokens.shape[1]
+    h = jnp.take(params["embed"], tokens, axis=0) \
+        + params["dec_pos"][:s][None].astype(cfg.dtype)
+
+    def body(x, layer):
+        p, c = layer
+        x, _ = _dec_block(cfg, p, c, x, enc_out)
+        return x, None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, (params["dec"], consts.get("dec", {})))
+    h = _apply_ln(params["dec_ln"], h, cfg.norm_eps)
+    return h @ params["embed"].T.astype(h.dtype), jnp.float32(0.0)
+
+
+def init_whisper_cache(cfg: ModelConfig, batch: int, max_len: int,
+                       abstract: bool = False):
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    mk = (lambda s: jax.ShapeDtypeStruct(s, dt)) if abstract else \
+         (lambda s: jnp.zeros(s, dt))
+    L = cfg.n_layers
+    return {
+        "self": {"k": mk((L, batch, max_len, cfg.n_kv_heads, hd)),
+                 "v": mk((L, batch, max_len, cfg.n_kv_heads, hd))},
+        "enc_out": mk((batch, cfg.encoder_seq, cfg.d_model)),
+    }
+
+
+def whisper_prefill_cache(cfg, params, consts, frames, batch, max_len):
+    """Run the encoder once and seed the decode cache."""
+    cache = init_whisper_cache(cfg, batch, max_len)
+    cache["enc_out"] = encode(cfg, params, consts, frames).astype(cfg.dtype)
+    return cache
+
+
+def whisper_decode_step(cfg: ModelConfig, params, consts, tokens, cache, index):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    pos = jax.lax.dynamic_slice_in_dim(params["dec_pos"], index, 1, axis=0)
+    h = h + pos[None].astype(h.dtype)
+    enc_out = cache["enc_out"]
+
+    def body(x, layer):
+        p, c, k, v = layer
+        x, new_kv = _dec_block(cfg, p, c, x, enc_out, cache={"k": k, "v": v},
+                               cache_index=index)
+        return x, new_kv
+
+    h, new_kv = jax.lax.scan(body, h, (params["dec"], consts.get("dec", {}),
+                                       cache["self"]["k"], cache["self"]["v"]))
+    h = _apply_ln(params["dec_ln"], h, cfg.norm_eps)
+    new_cache = {"self": new_kv, "enc_out": enc_out}
+    return h @ params["embed"].T.astype(h.dtype), new_cache

@@ -1,0 +1,314 @@
+"""xLSTM: mLSTM (matrix-memory, chunkwise-parallel) + sLSTM (scalar-memory,
+recurrent) blocks at ratio m:s = `xlstm_m_per_s` : 1.
+
+mLSTM is trained in a chunked linear-attention form (same segsum machinery
+as the SSD kernel — dense intra-chunk einsums for the MXU, lax.scan over
+chunk states), with the canonical |n·q| ≥ 1 normalizer realized by
+augmenting the value vectors with the gate channel. Gating uses the
+stabilized sigmoid variant (log-space decays); noted in DESIGN §5.
+
+sLSTM is inherently sequential → lax.scan over time with exponential-gating
+stabilizer state m.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Builder, apply_linear, rms_norm, silu, stack_layers
+from repro.models.mamba2 import _segsum
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, chunk: int):
+    """q,k,v: (b,s,h,p); i_gate,f_gate: (b,s,h) raw logits.
+    Returns y: (b,s,h,p) and final (C, n) state: (b,h,p,p+1)."""
+    b, s_orig, h, p = q.shape
+    a_log = jax.nn.log_sigmoid(f_gate)                 # per-step log decay
+    i_val = jax.nn.sigmoid(i_gate)
+    # augment values with the gate channel → the normalizer n rides along
+    ones = jnp.ones_like(v[..., :1])
+    v_aug = jnp.concatenate([v, ones], axis=-1) * i_val[..., None]  # (b,s,h,p+1)
+
+    chunk = min(chunk, s_orig)
+    pad = (-s_orig) % chunk
+    if pad:
+        p4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k = jnp.pad(q, p4), jnp.pad(k, p4)
+        v_aug = jnp.pad(v_aug, p4)
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // chunk
+    qc = q.reshape(b, nc, chunk, h, p)
+    kc = k.reshape(b, nc, chunk, h, p)
+    vc = v_aug.reshape(b, nc, chunk, h, p + 1).astype(jnp.float32)
+    ac = a_log.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)       # (b,h,c,l)
+
+    a_cum = jnp.cumsum(ac, axis=-1)
+    L = jnp.exp(_segsum(ac)).astype(jnp.float32)                    # (b,h,c,l,l)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        qc.astype(jnp.float32), kc.astype(jnp.float32), L, vc)
+
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchnp", kc.astype(jnp.float32),
+                        decay_states, vc)                           # (b,c,h,p,p+1)
+    chunk_decay = jnp.exp(a_cum[..., -1])
+
+    def scan_fn(carry, xs):
+        st, dec = xs
+        new = carry * dec[..., None, None] + st
+        return new, carry
+
+    init = jnp.zeros((b, h, p, p + 1), jnp.float32)
+    final, prev = jax.lax.scan(scan_fn, init,
+                               (states.transpose(1, 0, 2, 3, 4),
+                                chunk_decay.transpose(2, 0, 1)))
+    prev = prev.transpose(1, 0, 2, 3, 4)
+    y_off = jnp.einsum("bclhn,bchnp,bhcl->bclhp", qc.astype(jnp.float32),
+                       prev, jnp.exp(a_cum))
+    y_full = (y_diag + y_off).reshape(b, s, h, p + 1)[:, :s_orig]
+    num, den = y_full[..., :p], y_full[..., p]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return y.astype(q.dtype), final
+
+
+def mlstm_step(state, q_t, k_t, v_t, i_t, f_t):
+    """state: (b,h,p,p+1); q/k/v_t: (b,h,p); gates: (b,h)."""
+    dec = jnp.exp(jax.nn.log_sigmoid(f_t))[..., None, None]
+    ival = jax.nn.sigmoid(i_t)[..., None]
+    v_aug = jnp.concatenate([v_t, jnp.ones_like(v_t[..., :1])], -1) * ival
+    upd = jnp.einsum("bhn,bhp->bhnp", k_t.astype(jnp.float32),
+                     v_aug.astype(jnp.float32))
+    new = state * dec + upd
+    y_full = jnp.einsum("bhn,bhnp->bhp", q_t.astype(jnp.float32), new)
+    num, den = y_full[..., :-1], y_full[..., -1]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return y.astype(q_t.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(b: Builder, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner = 2 * d
+    h = cfg.n_heads
+    params, consts = {}, {}
+    params["ln"] = b.tensor("ln", (d,), "ones")
+    for name, di, do in (("up", d, 2 * d_inner), ("qkv", d_inner, 3 * d_inner),
+                         ("down", d_inner, d)):
+        p, c = b.linear(name, di, do)
+        params[name] = p
+        if c:
+            consts[name] = c
+    params["gates"] = {"w": b.tensor("gates_w", (d_inner, 2 * h), "normal",
+                                     fan_in=d_inner),
+                       "b": b.tensor("gates_b", (2 * h,), "zeros",
+                                     dtype=jnp.float32)}
+    params["out_norm"] = b.tensor("out_norm", (d_inner,), "ones")
+    return params, consts
+
+
+def apply_mlstm_block(cfg: ModelConfig, p, c, x, *, cache=None):
+    d = cfg.d_model
+    d_inner = 2 * d
+    h = cfg.n_heads
+    hd = d_inner // h
+    res = x
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = apply_linear(cfg, p["up"], c.get("up", {}), xn)
+    xm, z = jnp.split(up, 2, axis=-1)
+    qkv = apply_linear(cfg, p["qkv"], c.get("qkv", {}), xm)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    split = lambda t: t.reshape(*t.shape[:-1], h, hd)
+    q, k, v = split(q), split(k / np.sqrt(hd)), split(v)
+    gates = (xm @ p["gates"]["w"].astype(xm.dtype)).astype(jnp.float32) \
+        + p["gates"]["b"]
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)                    # (b,s,h)
+    if cache is None:
+        y, _ = mlstm_chunked(q, k, v, i_gate, f_gate, cfg.ssm.chunk)
+        new_cache = None
+    else:
+        y_t, new_state = mlstm_step(cache["C"], q[:, 0], k[:, 0], v[:, 0],
+                                    i_gate[:, 0], f_gate[:, 0])
+        y = y_t[:, None]
+        new_cache = {"C": new_state}
+    y = y.reshape(*y.shape[:-2], d_inner)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps) * silu(z)
+    return res + apply_linear(cfg, p["down"], c.get("down", {}), y), new_cache
+
+
+def init_slstm_block(b: Builder, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    params, consts = {}, {}
+    params["ln"] = b.tensor("ln", (d,), "ones")
+    p, c = b.linear("wx", d, 4 * d)          # i, f, z, o pre-activations
+    params["wx"] = p
+    if c:
+        consts["wx"] = c
+    # block-diagonal recurrent weights, (4, h, hd, hd)
+    params["R"] = b.tensor("R", (4, h, hd, hd), "normal", fan_in=hd)
+    params["bias"] = b.tensor("bias", (4 * d,), "zeros", dtype=jnp.float32)
+    # post-FFN (gated, factor 4/3 rounded to multiple of 64)
+    f = ((int(d * 4 / 3) + 63) // 64) * 64
+    for name, di, do in (("gate", d, f), ("up", d, f), ("down", f, d)):
+        p, c = b.linear(f"ffn_{name}", di, do)
+        params[f"ffn_{name}"] = p
+        if c:
+            consts[f"ffn_{name}"] = c
+    params["ln_ffn"] = b.tensor("ln_ffn", (d,), "ones")
+    return params, consts
+
+
+def _slstm_scan(cfg, p, xg, state):
+    """xg: (b, s, 4d) pre-activations; state: dict h,c,n,m of (b, heads, hd)."""
+    h_heads = cfg.n_heads
+    d = cfg.d_model
+    hd = d // h_heads
+    R = p["R"].astype(jnp.float32)
+
+    def step(st, x_t):
+        hp = st["h"]                                        # (b, h, hd)
+        rec = jnp.einsum("bhd,khde->kbhe", hp, R)           # (4, b, h, hd)
+        x4 = x_t.reshape(-1, 4, h_heads, hd).transpose(1, 0, 2, 3)
+        it, ft, zt, ot = (x4 + rec).astype(jnp.float32)
+        m_new = jnp.maximum(ft + st["m"], it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(ft + st["m"] - m_new)
+        c_new = f * st["c"] + i * jnp.tanh(zt)
+        n_new = f * st["n"] + i
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+        return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}, h_new
+
+    xg_t = xg.astype(jnp.float32).swapaxes(0, 1)            # (s, b, 4d)
+    state, ys = jax.lax.scan(step, state, xg_t)
+    return ys.swapaxes(0, 1), state                         # (b, s, h, hd)
+
+
+def slstm_init_state(cfg, batch, abstract=False):
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    mk = (lambda s: jax.ShapeDtypeStruct(s, jnp.float32)) if abstract else \
+         (lambda s: jnp.zeros(s, jnp.float32))
+    return {k: mk((batch, h, hd)) for k in ("h", "c", "n", "m")}
+
+
+def apply_slstm_block(cfg: ModelConfig, p, c, x, *, cache=None):
+    res = x
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    xg = apply_linear(cfg, p["wx"], c.get("wx", {}), xn).astype(jnp.float32) \
+        + p["bias"]
+    state = cache["s"] if cache is not None else \
+        slstm_init_state(cfg, x.shape[0])
+    ys, new_state = _slstm_scan(cfg, p, xg, state)
+    y = ys.reshape(*x.shape).astype(x.dtype)
+    x = res + y
+    hn = rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+    gate = apply_linear(cfg, p["ffn_gate"], c.get("ffn_gate", {}), hn)
+    up = apply_linear(cfg, p["ffn_up"], c.get("ffn_up", {}), hn)
+    down = apply_linear(cfg, p["ffn_down"], c.get("ffn_down", {}), silu(gate) * up)
+    new_cache = {"s": new_state} if cache is not None else None
+    return x + down, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def _xlstm_counts(cfg: ModelConfig):
+    per = cfg.xlstm_m_per_s + 1
+    assert cfg.n_layers % per == 0
+    return per, cfg.n_layers // per
+
+
+def init_xlstm(cfg: ModelConfig, key=None, seed: int = 0):
+    b = Builder(cfg, key, seed=seed)
+    per, n_super = _xlstm_counts(cfg)
+    params, consts = {}, {}
+    params["embed"] = b.tensor("embed", (cfg.padded_vocab, cfg.d_model),
+                               "normal", fan_in=cfg.d_model)
+
+    def super_block(bb: Builder):
+        mp, mc = stack_layers(bb, lambda b2: init_mlstm_block(b2, cfg),
+                              cfg.xlstm_m_per_s, "m")
+        sp, sc = init_slstm_block(bb.sub("s"), cfg)
+        out_p = {"mlstm": mp, "slstm": sp}
+        out_c = {}
+        if mc:
+            out_c["mlstm"] = mc
+        if sc:
+            out_c["slstm"] = sc
+        return out_p, out_c
+
+    params["supers"], cs = stack_layers(b.sub("supers"), super_block, n_super, "sb")
+    if cs:
+        consts["supers"] = cs
+    params["ln_f"] = b.tensor("ln_f", (cfg.d_model,), "ones")
+    params["lm_head"] = b.tensor("lm_head", (cfg.d_model, cfg.padded_vocab),
+                                 "normal", fan_in=cfg.d_model)
+    return params, consts
+
+
+def apply_xlstm(cfg: ModelConfig, params, consts, tokens, *, remat: str = "none"):
+    h = jnp.take(params["embed"], tokens, axis=0)
+
+    def super_body(x, layer):
+        p, c = layer
+        def inner(x, m_layer):
+            mp, mc = m_layer
+            x, _ = apply_mlstm_block(cfg, mp, mc, x)
+            return x, None
+        x, _ = jax.lax.scan(inner, x, (p["mlstm"], c.get("mlstm", {})))
+        x, _ = apply_slstm_block(cfg, p["slstm"], c.get("slstm", {}), x)
+        return x, None
+
+    if remat != "none":
+        super_body = jax.checkpoint(super_body)
+    h, _ = jax.lax.scan(super_body, h, (params["supers"], consts.get("supers", {})))
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    return h @ params["lm_head"].astype(h.dtype), jnp.float32(0.0)
+
+
+def init_xlstm_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     abstract: bool = False):
+    per, n_super = _xlstm_counts(cfg)
+    d_inner = 2 * cfg.d_model
+    h = cfg.n_heads
+    hd = d_inner // h
+    mk = (lambda s: jax.ShapeDtypeStruct(s, jnp.float32)) if abstract else \
+         (lambda s: jnp.zeros(s, jnp.float32))
+    slstm = jax.tree.map(lambda t: mk((n_super,) + t.shape),
+                         slstm_init_state(cfg, batch, abstract=True))
+    return {"supers": {
+        "mlstm": {"C": mk((n_super, cfg.xlstm_m_per_s, batch, h, hd, hd + 1))},
+        "slstm": {"s": slstm},
+    }}
+
+
+def xlstm_decode_step(cfg: ModelConfig, params, consts, tokens, cache, index):
+    h = jnp.take(params["embed"], tokens, axis=0)
+
+    def super_body(x, layer):
+        p, c, kv = layer
+        def inner(x, m_layer):
+            mp, mc, mcache = m_layer
+            x, ncache = apply_mlstm_block(cfg, mp, mc, x, cache=mcache)
+            return x, ncache
+        x, new_m = jax.lax.scan(inner, x, (p["mlstm"], c.get("mlstm", {}),
+                                           kv["mlstm"]))
+        x, new_s = apply_slstm_block(cfg, p["slstm"], c.get("slstm", {}), x,
+                                     cache=kv["slstm"])
+        return x, {"mlstm": new_m, "slstm": new_s}
+
+    h, new_supers = jax.lax.scan(super_body, h,
+                                 (params["supers"], consts.get("supers", {}),
+                                  cache["supers"]))
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    return h @ params["lm_head"].astype(h.dtype), {"supers": new_supers}

@@ -1,0 +1,1 @@
+from repro.optim import optimizers, quant, schedule  # noqa: F401

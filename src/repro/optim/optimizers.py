@@ -1,0 +1,228 @@
+"""Pure-JAX pytree optimizers: AdamW, blockwise-8-bit AdamW, GaLore-AdamW.
+
+Interface:
+    opt = adamw(oc)
+    state = opt.init(params)
+    new_params, new_state, stats = opt.update(grads, state, params)
+
+All optimizers share: global-norm gradient clipping, warmup-cosine schedule,
+decoupled weight decay on >=2-D leaves. The optimizer never sees the fixed
+SLTrain support (consts live outside the trainable tree), so its state
+scales with the *trainable* parameter count — the paper's memory claim.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.optim import quant
+from repro.optim.schedule import warmup_cosine
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable   # (grads, state, params) -> (new_params, new_state, stats)
+
+
+def _clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def _wd_mask(p):
+    return p.ndim >= 2
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(oc: OptimizerConfig) -> Optimizer:
+    lr_fn = warmup_cosine(oc)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = _clip_by_global_norm(grads, oc.grad_clip)
+        b1, b2 = oc.beta1, oc.beta2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = lr_fn(step)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + oc.eps)
+            if oc.weight_decay > 0 and _wd_mask(p):
+                u = u + oc.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "step": step}, \
+            {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise 8-bit AdamW (paper §5.1 "8-bit SLTrain")
+# ---------------------------------------------------------------------------
+
+def adam8bit(oc: OptimizerConfig) -> Optimizer:
+    lr_fn = warmup_cosine(oc)
+    block = oc.q_block
+
+    def _q(x, signed):
+        return quant.quantize_blockwise(x, block, signed)
+
+    def init(params):
+        def qz(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            cq, sq, n = _q(z, True)
+            return {"codes": cq, "scales": sq}
+        def qz_u(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            cq, sq, n = _q(z, False)
+            return {"codes": cq, "scales": sq}
+        return {"mu": jax.tree.map(qz, params),
+                "nu": jax.tree.map(qz_u, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = _clip_by_global_norm(grads, oc.grad_clip)
+        b1, b2 = oc.beta1, oc.beta2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = lr_fn(step)
+
+        def upd(p, g, mq, vq):
+            n = p.size
+            m = quant.dequantize_blockwise(mq["codes"], mq["scales"], n, p.shape, True)
+            v = quant.dequantize_blockwise(vq["codes"], vq["scales"], n, p.shape, False)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + oc.eps)
+            if oc.weight_decay > 0 and _wd_mask(p):
+                u = u + oc.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            mc, ms, _ = _q(m, True)
+            vc, vs, _ = _q(v, False)
+            return new_p, {"codes": mc, "scales": ms}, {"codes": vc, "scales": vs}
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["mu"])
+        flat_v = treedef.flatten_up_to(state["nu"])
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        return new_params, {"mu": mu, "nu": nu, "step": step}, \
+            {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# GaLore-AdamW (paper baseline [59]): low-rank gradient projection
+# ---------------------------------------------------------------------------
+
+def galore_adamw(oc: OptimizerConfig, project_fn: Callable | None = None
+                 ) -> Optimizer:
+    """project_fn(path, leaf) -> bool: which leaves get projected moments.
+    Default: 2-D leaves with both dims > galore_rank (linear weights)."""
+    lr_fn = warmup_cosine(oc)
+    r = oc.galore_rank
+
+    def is_proj(path, p):
+        if project_fn is not None:
+            return project_fn(path, p)
+        return p.ndim == 2 and min(p.shape) > r and "embed" not in str(path)
+
+    def init(params):
+        def st(path, p):
+            if is_proj(path, p):
+                d, q = p.shape
+                if d <= q:
+                    return {"P": jnp.zeros((d, r), jnp.float32),
+                            "mu": jnp.zeros((r, q), jnp.float32),
+                            "nu": jnp.zeros((r, q), jnp.float32)}
+                return {"P": jnp.zeros((q, r), jnp.float32),
+                        "mu": jnp.zeros((d, r), jnp.float32),
+                        "nu": jnp.zeros((d, r), jnp.float32)}
+            return {"mu": jnp.zeros(p.shape, jnp.float32),
+                    "nu": jnp.zeros(p.shape, jnp.float32)}
+        return {"leaves": jax.tree_util.tree_map_with_path(st, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = _clip_by_global_norm(grads, oc.grad_clip)
+        b1, b2 = oc.beta1, oc.beta2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = lr_fn(step)
+        refresh = (step - 1) % oc.galore_update_proj_gap == 0
+
+        def upd(path, p, g, st):
+            if "P" not in st:
+                m = b1 * st["mu"] + (1 - b1) * g
+                v = b2 * st["nu"] + (1 - b2) * g * g
+                u = (m / bc1) / (jnp.sqrt(v / bc2) + oc.eps)
+                if oc.weight_decay > 0 and _wd_mask(p):
+                    u = u + oc.weight_decay * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * u).astype(p.dtype), \
+                    {"mu": m, "nu": v}
+            d, q = p.shape
+            left = d <= q
+
+            def new_P(_):
+                # top-r singular vectors of the current gradient
+                if left:
+                    u_, _, _ = jnp.linalg.svd(g @ g.T)   # (d,d)
+                    return u_[:, :r]
+                _, _, vt = jnp.linalg.svd(g.T @ g)       # (q,q)
+                return vt[:r].T
+            P = jax.lax.cond(refresh, new_P, lambda _: st["P"], None)
+            R = P.T @ g if left else g @ P               # projected gradient
+            m = b1 * st["mu"] + (1 - b1) * R
+            v = b2 * st["nu"] + (1 - b2) * R * R
+            u_low = (m / bc1) / (jnp.sqrt(v / bc2) + oc.eps)
+            u = (P @ u_low if left else u_low @ P.T) * oc.galore_scale
+            if oc.weight_decay > 0:
+                u = u + oc.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), \
+                {"P": P, "mu": m, "nu": v}
+
+        paired = jax.tree_util.tree_map_with_path(
+            lambda path, p, g, st: upd(path, p, g, st),
+            params, grads, state["leaves"],
+            is_leaf=lambda x: isinstance(x, jnp.ndarray))
+        # unzip (params, state) tuples
+        new_params = jax.tree.map(lambda t: t[0], paired,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_leaves = jax.tree.map(lambda t: t[1], paired,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"leaves": new_leaves, "step": step}, \
+            {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)
+
+
+def make(oc: OptimizerConfig) -> Optimizer:
+    return {"adamw": adamw, "adam8bit": adam8bit,
+            "galore_adamw": galore_adamw}[oc.name](oc)

@@ -1,0 +1,35 @@
+"""Blockwise 8-bit state quantization (Dettmers et al. [9], as integrated by
+the paper's "8-bit SLTrain" §5.1). Symmetric linear code for the signed
+first moment, non-negative linear code for the second moment. The Pallas
+`adam8bit` kernel implements the same codec fused with the update; this is
+the XLA reference."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_blockwise(x, block: int = 256, signed: bool = True):
+    """x: any-shape float → (codes int8, scales f32 per block, orig_len)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    if signed:
+        scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+        codes = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    else:
+        scale = jnp.max(blocks, axis=1, keepdims=True) / 255.0
+        codes = jnp.round(blocks / jnp.maximum(scale, 1e-12)) - 128.0
+        codes = codes.astype(jnp.int8)
+    return codes, scale[:, 0], n
+
+
+def dequantize_blockwise(codes, scales, n, shape, signed: bool = True):
+    blocks = codes.astype(jnp.float32)
+    if not signed:
+        # half-quant-step floor: zero-quantized second moments explode the
+        # Adam update (see kernels/adam8bit.py)
+        blocks = jnp.maximum(blocks + 128.0, 0.5)
+    flat = (blocks * scales[:, None]).reshape(-1)[:n]
+    return flat.reshape(shape)

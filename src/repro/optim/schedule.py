@@ -1,0 +1,19 @@
+"""LR schedules (pure functions of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import OptimizerConfig
+
+
+def warmup_cosine(oc: OptimizerConfig):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = jnp.minimum(1.0, (step + 1) / max(1, oc.warmup_steps))
+        t = jnp.clip((step - oc.warmup_steps)
+                     / max(1, oc.total_steps - oc.warmup_steps), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(np.pi * t))
+        frac = oc.min_lr_ratio + (1.0 - oc.min_lr_ratio) * cos
+        return oc.lr * warm * frac
+    return lr

@@ -1,0 +1,150 @@
+"""train_step / serve_step builders: loss, grad accumulation, remat, and the
+jit/sharding glue. Arch-agnostic via the model registry API."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.registry import ModelApi
+from repro.optim.optimizers import Optimizer
+
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """Mean next-token CE in fp32; padded vocab tail masked out."""
+    lf = logits.astype(jnp.float32)
+    if lf.shape[-1] > vocab_size:
+        penalty = jnp.where(jnp.arange(lf.shape[-1]) < vocab_size, 0.0, -1e30)
+        lf = lf + penalty
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(cfg: ModelConfig, api: ModelApi, remat: str = "none",
+                 aux_coef: float = 0.01):
+    def loss_fn(params, consts, batch):
+        logits, aux = api.apply(cfg, params, consts, batch, remat=remat)
+        toks = batch["tokens"]
+        ce = cross_entropy(logits[:, :-1], toks[:, 1:], cfg.vocab_size)
+        return ce + aux_coef * aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, api: ModelApi, optimizer: Optimizer,
+                    *, remat: str = "none", grad_accum: int = 1,
+                    aux_coef: float = 0.01):
+    """Returns train_step(params, opt_state, consts, batch) ->
+    (params, opt_state, metrics). With grad_accum > 1 the global batch is
+    split into microbatches scanned sequentially (grads averaged) — the
+    schedule point straggler mitigation and PP would hook into (DESIGN §7)."""
+    loss_fn = make_loss_fn(cfg, api, remat, aux_coef)
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, consts, batch):
+        if grad_accum == 1:
+            (loss, parts), grads = vg(params, consts, batch)
+        else:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                (l, _), g = vg(params, consts, mb)
+                return (jax.tree.map(jnp.add, acc, g), loss_acc + l), None
+
+            def split(leaf):
+                b = leaf.shape[0]
+                return leaf.reshape(grad_accum, b // grad_accum, *leaf.shape[1:])
+            micro_batches = jax.tree.map(split, batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, jnp.float32(0.0)),
+                                            micro_batches)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            parts = {"ce": loss, "aux": jnp.float32(0.0)}
+        new_params, new_opt, stats = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, **parts, **stats}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, api: ModelApi, *, greedy: bool = True,
+                    temperature: float = 1.0):
+    """serve_step(params, consts, tokens, cache, index, rng) ->
+    (next_tokens (B,1), logits, new_cache). One batched decode step."""
+    def serve_step(params, consts, tokens, cache, index, rng=None):
+        logits, new_cache = api.decode_step(cfg, params, consts, tokens,
+                                            cache, index)
+        last = logits[:, -1, :cfg.vocab_size].astype(jnp.float32)
+        if greedy:
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(rng, last / temperature).astype(jnp.int32)
+        return nxt[:, None], logits, new_cache
+    return serve_step
+
+
+def make_eval_step(cfg: ModelConfig, api: ModelApi):
+    loss_fn = make_loss_fn(cfg, api)
+
+    def eval_step(params, consts, batch):
+        loss, parts = loss_fn(params, consts, batch)
+        return {"loss": loss, "ppl": jnp.exp(parts["ce"]), **parts}
+    return eval_step
+
+
+def make_compressed_dp_step(cfg: ModelConfig, api: ModelApi,
+                            optimizer: Optimizer, mesh, *,
+                            pod_axis: str = "pod", block: int = 256,
+                            aux_coef: float = 0.01):
+    """Hierarchical data-parallel train step with int8-compressed cross-pod
+    gradient reduction (DESIGN §4: the pod axis is the slow DCI link).
+
+    shard_map over the pod axis: each pod computes grads on its batch shard
+    with full precision locally (pjit handles intra-pod sharding inside the
+    body on real hardware; here the body is the whole per-pod step), then
+    the pods exchange int8-quantized gradients — 4× less DCI wire than f32
+    psum, exact int32 summation on the wire (dist/compression.py).
+
+    Params/opt-state are replicated across pods (DP); the batch shards.
+    """
+    import numpy as _np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.compression import psum_tree
+
+    loss_fn = make_loss_fn(cfg, api, "none", aux_coef)
+    n_pods = mesh.shape[pod_axis]
+
+    def body(params, opt_state, consts, batch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, consts, batch)
+        grads = psum_tree(grads, pod_axis, compress=True, block=block)
+        grads = jax.tree.map(lambda g: g / n_pods, grads)
+        loss = jax.lax.pmean(loss, pod_axis)
+        new_params, new_opt, stats = optimizer.update(grads, opt_state,
+                                                      params)
+        return new_params, new_opt, {"loss": loss, **stats}
+
+    rep = P()  # replicated across the pod axis
+
+    def specs_like(tree, leading_batch=False):
+        def spec(leaf):
+            if leading_batch:
+                return P(pod_axis, *([None] * (leaf.ndim - 1)))
+            return P(*([None] * leaf.ndim))
+        return jax.tree.map(spec, tree)
+
+    def step(params, opt_state, consts, batch):
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(specs_like(params), specs_like(opt_state),
+                      specs_like(consts), specs_like(batch, True)),
+            out_specs=(specs_like(params), specs_like(opt_state),
+                       {"loss": rep, "grad_norm": rep, "lr": rep}),
+            check_vma=False,
+        )(params, opt_state, consts, batch)
+
+    return step

@@ -1,0 +1,222 @@
+"""Training loop: logging, checkpoint/restart, preemption handling,
+straggler watchdog, fault-injection hooks (DESIGN §7).
+
+The loop is deliberately framework-grade rather than script-grade:
+  * resume-from-latest is the default (idempotent relaunch == restart),
+  * SIGTERM/SIGINT triggers a synchronous checkpoint then exit(42) so a
+    cluster scheduler can requeue the job (preemption safety),
+  * a per-step deadline watchdog flags stragglers; the mitigation hook
+    (re-dispatching the slow host's shard) is pluggable — on a single host
+    we log and continue, on a fleet the launcher wires in spares,
+  * ``fault_hook(step)`` lets tests inject crashes at exact steps to prove
+    kill/resume bit-exactness (tests/test_fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import signal
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs.base import TrainConfig
+from repro.core import relora as relora_lib
+from repro.data.pipeline import SyntheticC4
+from repro.models import registry
+from repro.optim import optimizers
+from repro.train import step as step_lib
+
+
+def _make_relora_merge(cfg):
+    """ReLoRA restart (paper eq. (1) / baseline [32]): at each period end,
+    merge BA into W0, re-init the factors, and ZERO the factors' Adam
+    moments (the optimizer-state reset the paper's schedule requires)."""
+    scale = cfg.param.scale
+
+    def merge(params, opt_state, key):
+        is_relora = lambda t: isinstance(t, dict) and \
+            {"W0", "B", "A"} <= set(t.keys())
+
+        leaves_done = []
+
+        def walk(t, k):
+            if is_relora(t):
+                k, sub = jax.random.split(k)
+                merged = relora_lib.merge(t, sub, scale)
+                leaves_done.append(True)
+                return merged, k
+            if isinstance(t, dict):
+                out = {}
+                for name in t:
+                    out[name], k = walk(t[name], k)
+                return out, k
+            return t, k
+
+        new_params, _ = walk(params, key)
+
+        new_opt = dict(opt_state)
+        if "mu" in opt_state:
+            def reset(tree):
+                def go(m, p):
+                    if isinstance(p, dict) and {"W0", "B", "A"} <= set(p):
+                        out = dict(m)
+                        out["B"] = jnp.zeros_like(m["B"])
+                        out["A"] = jnp.zeros_like(m["A"])
+                        return out
+                    if isinstance(p, dict):
+                        return {n: go(m[n], p[n]) for n in p}
+                    return m
+                return go(tree, params)
+            new_opt["mu"] = reset(opt_state["mu"])
+            new_opt["nu"] = reset(opt_state["nu"])
+        return new_params, new_opt
+
+    return merge
+
+
+@dataclass
+class TrainerState:
+    params: Any
+    opt_state: Any
+    consts: Any
+    step: int = 0
+
+
+@dataclass
+class StepTimeWatchdog:
+    """Flags steps slower than ``factor`` × the rolling median (straggler
+    detection). The *response* is a callback so deployments can re-dispatch
+    the straggler's data shard to a hot spare (DESIGN §7)."""
+    factor: float = 3.0
+    window: int = 32
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+    times: List[float] = field(default_factory=list)
+    flagged: List[int] = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        med = float(np.median(self.times))
+        slow = len(self.times) >= 8 and dt > self.factor * med
+        if slow:
+            self.flagged.append(step)
+            if self.on_straggler:
+                self.on_straggler(step, dt, med)
+        return slow
+
+
+class Trainer:
+    def __init__(self, tc: TrainConfig, *, mesh=None, log_fn=print,
+                 fault_hook: Optional[Callable[[int], None]] = None):
+        self.tc = tc
+        self.mesh = mesh
+        self.log = log_fn
+        self.fault_hook = fault_hook
+        self.cfg = tc.model
+        self.api = registry.get_api(self.cfg)
+        self.optimizer = optimizers.make(tc.optim)
+        self.ckpt = CheckpointManager(tc.ckpt_dir, keep=tc.keep_ckpts)
+        self.data = SyntheticC4(self.cfg.vocab_size, tc.seq_len,
+                                tc.global_batch, seed=tc.seed)
+        self.watchdog = StepTimeWatchdog()
+        self._preempted = False
+        self.metrics_history: List[Dict[str, float]] = []
+
+        self._train_step = jax.jit(step_lib.make_train_step(
+            self.cfg, self.api, self.optimizer,
+            remat=tc.sharding.remat, grad_accum=tc.sharding.grad_accum))
+        self._relora_merge = jax.jit(_make_relora_merge(self.cfg)) \
+            if self.cfg.param.mode == "relora" else None
+
+    # -- state ----------------------------------------------------------------
+    def init_state(self) -> TrainerState:
+        key = jax.random.PRNGKey(self.tc.seed)
+        params, consts = self.api.init(self.cfg, key, seed=self.tc.seed)
+        opt_state = self.optimizer.init(params)
+        return TrainerState(params, opt_state, consts, step=0)
+
+    def save(self, state: TrainerState, background: Optional[bool] = None) -> None:
+        bg = self.tc.async_ckpt if background is None else background
+        self.ckpt.save(
+            state.step,
+            {"params": state.params, "opt_state": state.opt_state},
+            config_hash=self.cfg.hash(),
+            extra={"data": self.data.state_dict()},
+            background=bg)
+
+    def restore_or_init(self) -> TrainerState:
+        state = self.init_state()
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return state
+        tree, manifest = self.ckpt.restore(
+            {"params": state.params, "opt_state": state.opt_state},
+            step=latest, config_hash=self.cfg.hash())
+        self.data.restore(manifest["extra"]["data"])
+        self.log(f"[trainer] resumed from step {latest}")
+        return TrainerState(tree["params"], tree["opt_state"], state.consts,
+                            step=latest)
+
+    # -- preemption -----------------------------------------------------------
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass  # not on main thread (tests)
+
+    # -- loop -------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None,
+            state: Optional[TrainerState] = None) -> TrainerState:
+        tc = self.tc
+        total = steps if steps is not None else tc.steps
+        if state is None:
+            state = self.restore_or_init()
+        self._install_signal_handlers()
+        while state.step < total:
+            if self.fault_hook:
+                self.fault_hook(state.step)  # test hook: may raise/kill
+            batch_np = self.data.next_batch()
+            batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self._train_step(
+                state.params, state.opt_state, state.consts, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            state = TrainerState(params, opt_state, state.consts,
+                                 state.step + 1)
+            if self._relora_merge is not None and \
+                    state.step % self.cfg.param.relora_period == 0:
+                key = jax.random.fold_in(jax.random.PRNGKey(self.tc.seed),
+                                         state.step)
+                params, opt_state = self._relora_merge(
+                    state.params, state.opt_state, key)
+                state = TrainerState(params, opt_state, state.consts,
+                                     state.step)
+                self.log(f"[trainer] ReLoRA merge+restart at {state.step}")
+            slow = self.watchdog.observe(state.step, dt)
+            row = {k: float(v) for k, v in metrics.items()}
+            row.update(step=state.step, dt=dt)
+            self.metrics_history.append(row)
+            if state.step % tc.log_every == 0 or state.step == total:
+                self.log(f"[step {state.step:5d}] loss={row['loss']:.4f} "
+                         f"lr={row.get('lr', 0):.2e} {dt*1e3:.0f}ms"
+                         + (" STRAGGLER" if slow else ""))
+            if self._preempted:
+                self.log("[trainer] preemption signal: checkpoint + exit 42")
+                self.save(state, background=False)
+                self.ckpt.wait()
+                sys.exit(42)
+            if tc.ckpt_every and state.step % tc.ckpt_every == 0:
+                self.save(state)
+        self.save(state, background=False)
+        self.ckpt.wait()
+        return state

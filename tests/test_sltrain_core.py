@@ -1,0 +1,200 @@
+"""Property-based tests on the paper's core invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sltrain, support
+
+DIMS = st.integers(min_value=8, max_value=96)
+
+
+# ---------------------------------------------------------------------------
+# Support invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(d_in=DIMS, d_out=DIMS, seed=st.integers(0, 2**31 - 1),
+       delta=st.floats(0.01, 0.2),
+       kind=st.sampled_from(["row_balanced", "iid"]))
+def test_support_valid_and_deterministic(d_in, d_out, seed, delta, kind):
+    r1, c1 = support.sample_support(seed, d_in, d_out, delta, kind)
+    r2, c2 = support.sample_support(seed, d_in, d_out, delta, kind)
+    assert (r1 == r2).all() and (c1 == c2).all()  # restart-safe (DESIGN §7)
+    assert r1.shape == c1.shape
+    assert (0 <= r1).all() and (r1 < d_in).all()
+    assert (0 <= c1).all() and (c1 < d_out).all()
+    assert r1.shape[0] == support.nnz_for(d_in, d_out, delta, kind)
+    # no duplicate (row, col) pairs — V entries map 1:1 to matrix cells
+    flat = r1.astype(np.int64) * d_out + c1
+    assert len(np.unique(flat)) == flat.shape[0]
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(32, 128), seed=st.integers(0, 1000))
+def test_prop1_full_rank_whp(n, seed):
+    """Proposition 1: BA + S with random support δ=Ω(log n/n) is full rank."""
+    delta = 3.0 * np.log(n) / n
+    rng = np.random.default_rng(seed)
+    rows, cols = support.sample_support(seed, n, n, delta, "row_balanced")
+    S = np.zeros((n, n))
+    S[rows, cols] = rng.standard_normal(rows.shape[0])
+    B = rng.standard_normal((n, 4))
+    A = rng.standard_normal((4, n))
+    assert np.linalg.matrix_rank(B @ A + S) == n
+
+
+def test_lowrank_alone_is_rank_deficient():
+    """Counterpoint to Prop. 1: without S the rank is capped at r."""
+    rng = np.random.default_rng(0)
+    B = rng.standard_normal((64, 4))
+    A = rng.standard_normal((4, 64))
+    assert np.linalg.matrix_rank(B @ A) == 4
+
+
+@settings(max_examples=10, deadline=None)
+@given(d_in=st.integers(16, 64), d_out=st.integers(16, 64),
+       delta=st.floats(0.02, 0.1))
+def test_param_count_formula(d_in, d_out, delta):
+    """Paper §3.2: params = (d+p)·r + nnz(S)."""
+    r = 4
+    params, consts = sltrain.init_params(
+        jax.random.PRNGKey(0), d_in, d_out, r, delta, jnp.float32)
+    trainable = sum(x.size for x in jax.tree.leaves(params))
+    expect, nnz = sltrain.param_count(d_in, d_out, r, delta)
+    assert trainable == expect
+    assert consts["cols"].size == nnz
+
+
+# ---------------------------------------------------------------------------
+# Forward/backward algebra (paper eq. 2)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000),
+       kind=st.sampled_from(["row_balanced", "iid"]))
+def test_matmul_equals_densified(seed, kind):
+    d_in, d_out, r, m = 40, 56, 4, 12
+    params, consts = sltrain.init_params(
+        jax.random.PRNGKey(seed), d_in, d_out, r, 0.05, jnp.float32, kind,
+        seed=seed)
+    # non-zero B so the low-rank part contributes
+    params["B"] = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                    params["B"].shape) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(seed + 2), (m, d_in))
+    y = sltrain.sl_matmul(x, params, consts, 0.5)
+    W = sltrain.materialize(params, consts, 0.5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ W), atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000),
+       kind=st.sampled_from(["row_balanced", "iid"]))
+def test_custom_vjp_matches_autodiff_of_densified(seed, kind):
+    """Gradients from the paper's eq. (2) == autodiff through densify."""
+    d_in, d_out, r, m = 32, 48, 4, 10
+    params, consts = sltrain.init_params(
+        jax.random.PRNGKey(seed), d_in, d_out, r, 0.05, jnp.float32, kind,
+        seed=seed)
+    params["B"] = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                    params["B"].shape) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(seed + 2), (m, d_in))
+    t = jax.random.normal(jax.random.PRNGKey(seed + 3), (m, d_out))
+
+    def loss_fast(p, xx):
+        return jnp.sum((sltrain.sl_matmul(xx, p, consts, 0.5) - t) ** 2)
+
+    def loss_ref(p, xx):
+        W = sltrain.materialize(p, consts, 0.5)
+        return jnp.sum((xx @ W - t) ** 2)
+
+    g1, gx1 = jax.grad(loss_fast, argnums=(0, 1))(params, x)
+    g2, gx2 = jax.grad(loss_ref, argnums=(0, 1))(params, x)
+    for k in g1:
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2),
+                               atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_sparse_exec_mode_matches_dense(seed):
+    """Decode path (beyond-paper, DESIGN §3): factored sparse execution must
+    agree with the densify path bit-for-bit-ish."""
+    d_in, d_out, r = 48, 64, 8
+    params, consts = sltrain.init_params(
+        jax.random.PRNGKey(seed), d_in, d_out, r, 0.05, jnp.float32,
+        seed=seed)
+    params["B"] = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                    params["B"].shape) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(seed + 2), (3, d_in))
+    y_d = sltrain.sl_matmul(x, params, consts, 0.5, exec_mode="dense")
+    y_s = sltrain.sl_matmul(x, params, consts, 0.5, exec_mode="sparse")
+    np.testing.assert_allclose(np.asarray(y_d), np.asarray(y_s), atol=1e-4)
+
+
+def test_residual_memory_is_factored():
+    """Alg. 1: the VJP must save only {x, B, A, v, cols} — the densified W
+    must NOT be a residual (that is the paper's memory claim)."""
+    d_in, d_out, r, m = 64, 64, 8, 16
+    params, consts = sltrain.init_params(
+        jax.random.PRNGKey(0), d_in, d_out, r, 0.03, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, d_in))
+
+    def f(p):
+        return jnp.sum(sltrain.sl_matmul(x, p, consts, 0.5))
+
+    # linearize exposes the residual pytree sizes
+    _, vjp = jax.vjp(f, params)
+    res_bytes = sum(x.size * x.dtype.itemsize
+                    for x in jax.tree.leaves(jax.tree.map(lambda a: a, vjp)))
+    dense_W_bytes = d_in * d_out * 4
+    factored = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    # residuals ≈ params + x, far below storing W per token-batch
+    assert res_bytes <= factored + x.size * 4 + dense_W_bytes * 0 + 4096, \
+        f"residuals {res_bytes}B suggest densified W was saved"
+
+
+# ---------------------------------------------------------------------------
+# Tile layout / partition invariants (kernel + TP substrate)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500), d_in=st.integers(64, 300),
+       d_out=st.integers(64, 300))
+def test_tile_layout_is_permutation(seed, d_in, d_out):
+    rows, cols = support.sample_support(seed, d_in, d_out, 0.03,
+                                        "row_balanced")
+    kp = ((d_in + 127) // 128) * 128
+    np_ = ((d_out + 127) // 128) * 128
+    perm, local, counts, pad = support.tile_layout(rows, cols, kp, np_)
+    valid = perm[perm >= 0]
+    assert len(np.unique(valid)) == rows.shape[0]  # every entry exactly once
+    assert counts.sum() == rows.shape[0]
+    # local ids reconstruct global ids
+    nt_c = np_ // 128
+    for t in range(0, counts.size, max(1, counts.size // 7)):
+        tr, tc = t // nt_c, t % nt_c
+        sl = slice(t * pad, (t + 1) * pad)
+        p = perm[sl]
+        loc = local[sl]
+        m = p >= 0
+        assert (rows[p[m]] == loc[m, 0] + tr * 128).all()
+        assert (cols[p[m]] == loc[m, 1] + tc * 128).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), n_shards=st.sampled_from([2, 4, 8]))
+def test_partition_support_covers_all(seed, n_shards):
+    d_in, d_out = 128, 256
+    rows, cols = support.sample_support(seed, d_in, d_out, 0.05,
+                                        "row_balanced")
+    r, c, m, cap = support.partition_support(rows, cols, n_shards, d_out,
+                                             axis="col")
+    assert int(m.sum()) == rows.shape[0]
+    shard_sz = d_out // n_shards
+    for s in range(n_shards):
+        sel = m[s]
+        assert (c[s][sel] < shard_sz).all()      # indices are shard-local
