@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# One-command regression gate: tier-1 tests + core smoke + a host-mesh
+# dry-run through the repro.dist spec engine. Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: core SLTrain invariants =="
+python scripts/smoke_core.py
+
+echo "== dry-run: llama_60m x train_4k on the 256-chip host mesh =="
+python -m repro.launch.dryrun --arch llama_60m --cell train_4k
+
+echo "ci_check: all gates passed"

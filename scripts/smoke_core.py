@@ -24,7 +24,7 @@ def loss_custom(p, x):
 
 
 def loss_ref(p, x):
-    W = sltrain.densify(p["B"], p["A"], p["v"], consts["rows"], consts["cols"], scale)
+    W = sltrain.materialize(p, consts, scale)
     return jnp.sum(jnp.sin(x @ W))
 
 

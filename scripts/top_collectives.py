@@ -1,13 +1,17 @@
 """Diagnostic: lower one cell and print the largest collectives by wire
-bytes (with while-loop trip multipliers) — the §Perf profiling tool."""
+bytes (with while-loop trip multipliers) — the §Perf profiling tool.
+
+Reuses ``launch/dryrun.py:lower_cell`` (which routes all sharding through
+``repro.dist.sharding``) and only adds the per-collective HLO walk.
+"""
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                            " --xla_force_host_platform_device_count=512").strip()
 import argparse
 import collections
-import re
+import sys
 
-from repro.analysis import hlo_parser
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
 
 
 def main():
@@ -17,9 +21,11 @@ def main():
     ap.add_argument("--remat", default="none")
     ap.add_argument("--sp", action="store_true")
     ap.add_argument("--mode", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--top", type=int, default=15)
     args = ap.parse_args()
 
+    from repro.analysis import hlo_parser
     from repro.configs.base import SHAPE_CELLS
     from repro.launch import dryrun
 
@@ -30,71 +36,10 @@ def main():
     if args.mode:
         overrides["param_mode"] = args.mode
 
-    # reuse lower_cell but keep the compiled text
-    import repro.launch.dryrun as dr
-    import jax
-    # monkeypatch-free: call the internals directly
-    cell = cells[args.cell]
-    res = None
-    # replicate lower_cell but capture text
-    from repro.launch.mesh import make_production_mesh
-    mesh = make_production_mesh()
-    # lower via the public helper, then re-lower to get text: simplest is to
-    # copy the flow
-    import repro.launch.dryrun as d
-    # we just call lower_cell and recompute text by running analyze inside
-    # -> instead: duplicate minimal flow
-    from repro.models import registry
-    from repro.launch import specs
-    from repro.dist import sharding as shl
-    from repro.optim import optimizers
-    from repro.train import step as step_lib
-    from repro.configs.base import OptimizerConfig
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    cfg = registry.get_config(args.arch, **{k: v for k, v in overrides.items()
-                                            if k != "param_mode"})
-    if "param_mode" in overrides:
-        import dataclasses
-        cfg = dataclasses.replace(cfg, param=dataclasses.replace(
-            cfg.param, mode=overrides["param_mode"]))
-    api = registry.get_api(cfg)
-    params_abs, consts_abs = api.init(cfg, key=None)
-    p_specs = shl.param_specs(params_abs, mesh)
-    c_specs = shl.param_specs(consts_abs, mesh)
-    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
-                                is_leaf=lambda x: isinstance(x, P))
-    if cell.kind in ("train", "prefill"):
-        batch_abs = specs.input_specs(cfg, cell.global_batch, cell.seq_len,
-                                      abstract=True)
-        b_specs = shl.batch_specs(batch_abs, mesh, ("data",))
-        opt = optimizers.make(OptimizerConfig())
-        opt_abs = jax.eval_shape(opt.init, params_abs)
-        o_specs = shl.opt_state_specs(opt_abs, p_specs, mesh)
-        fn = step_lib.make_train_step(cfg, api, opt, remat=args.remat)
-        jfn = jax.jit(fn, in_shardings=(ns(p_specs), ns(o_specs),
-                                        ns(c_specs), ns(b_specs)),
-                      out_shardings=(ns(p_specs), ns(o_specs), None))
-        with mesh:
-            compiled = jfn.lower(params_abs, opt_abs, consts_abs,
-                                 batch_abs).compile()
-    else:
-        cache_abs = api.init_cache(cfg, cell.global_batch, cell.seq_len,
-                                   abstract=True)
-        k_specs = shl.cache_specs(cache_abs, mesh, batch_axes=("data",))
-        tokens_abs, index_abs = specs.decode_inputs(cfg, cell.global_batch,
-                                                    cell.seq_len,
-                                                    abstract=True)
-        b_spec = shl.batch_specs({"t": tokens_abs}, mesh, ("data",))["t"]
-        fn = step_lib.make_serve_step(cfg, api)
-        jfn = jax.jit(fn, in_shardings=(ns(p_specs), ns(c_specs),
-                                        NamedSharding(mesh, b_spec),
-                                        ns(k_specs), None),
-                      out_shardings=(NamedSharding(mesh, b_spec), None,
-                                     ns(k_specs)))
-        with mesh:
-            compiled = jfn.lower(params_abs, consts_abs, tokens_abs,
-                                 cache_abs, index_abs).compile()
+    _, compiled = dryrun.lower_cell(
+        args.arch, cells[args.cell], multi_pod=args.multi_pod,
+        remat=args.remat, cfg_overrides=overrides or None, verbose=False,
+        with_compiled=True)
 
     txt = compiled.as_text()
     comps, entry = hlo_parser.parse_program(txt)
@@ -113,13 +58,9 @@ def main():
                 for cn in inst.called:
                     trip_of_comp[cn] = max(trip_of_comp.get(cn, 1), t)
 
-    def eff_trip(cname, depth=0):
-        t = trip_of_comp.get(cname, 1)
-        return t
-
     agg = collections.Counter()
     for cname, comp in comps.items():
-        t = eff_trip(cname)
+        t = trip_of_comp.get(cname, 1)
         for inst in comp.insts:
             if inst.op in hlo_parser._COLLECTIVES:
                 opd = 0

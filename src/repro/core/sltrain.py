@@ -138,8 +138,8 @@ def _grads_distributed(x, dy, A, B, v, cols, scale):
     gather-W form (the it.6 lesson: a seq-sharded island de-sharded the
     whole backward region, 5× compute). Each device computes the
     (d_in × d_out/TP) G slice it would have computed as a partial anyway."""
-    from repro.models.common import ambient_mesh   # lazy: avoid cycle
-    mesh = ambient_mesh()
+    from repro.dist import compat, sharding as dist_sharding
+    mesh = dist_sharding.ambient_mesh()
     if mesh is None or getattr(mesh, "empty", False) or x.ndim < 3:
         return None
     if x.shape[-1] > dy.shape[-1]:
@@ -179,7 +179,7 @@ def _grads_distributed(x, dy, A, B, v, cols, scale):
         return dB, dA, dv
 
     try:
-        dB, dA, dv = jax.shard_map(
+        dB, dA, dv = compat.shard_map(
             body, mesh=mesh,
             in_specs=(P(bt, None, None), P(bt, None, "model"),
                       P(None, "model"), P(None, None), P(None, None)),
@@ -263,11 +263,15 @@ def _sl_matmul_sparse(x, B, A, v, rows, cols, scale, chunk: int = 1 << 20):
     lead = x.shape[:-1]
     d_in = x.shape[-1]
     d_out = A.shape[-1]
-    xf = x.reshape(-1, d_in)
-    y = ((xf @ B) @ A) * jnp.asarray(scale, dtype=x.dtype)
+    # Accumulate in f32 end to end: the bf16 intermediate casts of the old
+    # path ((x@B)@A each rounded to bf16, sparse contribs formed in bf16)
+    # drifted several ulp from the densified path — enough to flip greedy
+    # argmax in decode. One final rounding, like the dense path's matmul.
+    xf = x.reshape(-1, d_in).astype(jnp.float32)
+    y = ((xf @ B.astype(jnp.float32)) @ A.astype(jnp.float32)) * scale
     rows = rows.reshape(-1)
     cols = cols.reshape(-1)
-    vf = v.reshape(-1)
+    vf = v.reshape(-1).astype(jnp.float32)
     nnz = rows.shape[0]
     chunk = min(chunk, nnz)
     n_chunks = max(1, (nnz + chunk - 1) // chunk)
@@ -278,16 +282,16 @@ def _sl_matmul_sparse(x, B, A, v, rows, cols, scale, chunk: int = 1 << 20):
 
     def body(acc, args):
         r, c, vv = args
-        contrib = xf[:, r] * vv[None, :].astype(xf.dtype)       # (N, chunk)
+        contrib = xf[:, r] * vv[None, :]                        # (N, chunk) f32
         upd = jnp.zeros((d_out, acc.shape[0]), dtype=jnp.float32)
-        upd = upd.at[c].add(contrib.T.astype(jnp.float32))      # segsum by col
-        return acc + upd.T.astype(acc.dtype), None
+        upd = upd.at[c].add(contrib.T)                          # segsum by col
+        return acc + upd.T, None
 
     if n_chunks == 1:
         y, _ = body(y, (rows_p[0], cols_p[0], v_p[0]))
     else:
         y, _ = jax.lax.scan(body, y, (rows_p, cols_p, v_p))
-    return y.reshape(*lead, d_out)
+    return y.astype(x.dtype).reshape(*lead, d_out)
 
 
 # ---------------------------------------------------------------------------

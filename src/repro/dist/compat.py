@@ -1,0 +1,116 @@
+"""Version-portable wrappers over the jax distribution APIs.
+
+The repo targets the modern spellings (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``) but must run on the pinned jax 0.4.37, which
+only ships ``jax.experimental.shard_map.shard_map(check_rep=...)`` and a
+``jax.make_mesh`` without ``axis_types``. Everything in the repo (and the
+tests) goes through this module — either by calling :func:`shard_map` /
+:func:`make_mesh` directly, or via :func:`install_forward_compat`, which
+grafts the modern names onto the ``jax`` namespace so modern-style call
+sites work unchanged on the old pin.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+class AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (jax >= 0.5).
+
+    On the 0.4.x pin every mesh axis behaves like ``Auto`` (GSPMD decides
+    placement); the enum exists so mesh-construction call sites written
+    against the modern API type-check and run.
+    """
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _native_shard_map():
+    """The best shard_map the installed jax offers, plus its kwarg style."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None and not getattr(fn, "_repro_compat_shim", False):
+        return fn, "check_vma"
+    from jax.experimental.shard_map import shard_map as exp_shard_map
+    return exp_shard_map, "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+              check_rep=None, **kwargs):
+    """Portable ``shard_map``: accepts either replication-check spelling.
+
+    ``check_vma`` (jax >= 0.6) and ``check_rep`` (jax <= 0.5) are the same
+    knob; pass whichever you like and the installed jax gets the one it
+    understands. Remaining kwargs are forwarded verbatim.
+    """
+    native, knob = _native_shard_map()
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None:
+        kwargs[knob] = check
+    return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  **kwargs)
+
+
+@functools.lru_cache(maxsize=1)
+def _make_mesh_takes_axis_types() -> bool:
+    try:
+        return "axis_types" in inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    """Portable ``jax.make_mesh``: drops ``axis_types`` on jax that predates
+    it (all axes behave as Auto there anyway)."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and _make_mesh_takes_axis_types():
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+_installed = False
+
+
+def install_forward_compat() -> None:
+    """Graft the modern distribution API names onto ``jax`` when missing.
+
+    Idempotent. After this runs, modern-style call sites —
+    ``jax.shard_map(..., check_vma=False)``,
+    ``jax.make_mesh(..., axis_types=(jax.sharding.AxisType.Auto,) * n)`` —
+    work on the 0.4.x pin. On a jax that already has the real APIs this is
+    a no-op, so the shims never shadow native behaviour.
+    """
+    global _installed
+    if _installed:
+        return
+    _installed = True
+
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+
+    if not hasattr(jax, "shard_map"):
+        @functools.wraps(shard_map)
+        def _shard_map_shim(f, **kwargs):
+            return shard_map(f, **kwargs)
+        _shard_map_shim._repro_compat_shim = True
+        jax.shard_map = _shard_map_shim
+
+    if not _make_mesh_takes_axis_types():
+        orig = jax.make_mesh
+
+        def _make_mesh_shim(axis_shapes, axis_names, *, devices=None,
+                            axis_types=None):
+            kwargs = {"devices": devices} if devices is not None else {}
+            return orig(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+        _make_mesh_shim._repro_compat_shim = True
+        _make_mesh_shim.__wrapped__ = orig
+        jax.make_mesh = _make_mesh_shim

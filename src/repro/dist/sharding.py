@@ -1,0 +1,331 @@
+"""The sharding spec engine: PartitionSpecs from pytree paths (DESIGN §4).
+
+Single owner of every mesh/sharding decision in the repo:
+
+* **Mesh construction** — :func:`make_production_mesh` (16×16 single-pod,
+  2×16×16 multi-pod) and :func:`make_local_mesh`, built through the
+  version-portable :mod:`repro.dist.compat` layer.
+* **Ambient-mesh probing** — :func:`ambient_mesh` / :func:`constrain`, the
+  degrading ``with_sharding_constraint`` used inside model code (moved
+  here from ``models/common.py`` so model files carry no mesh logic).
+* **Spec derivation** — :func:`spec_for_param` maps a pytree path + leaf
+  to a PartitionSpec; :func:`param_specs` / :func:`batch_specs` /
+  :func:`opt_state_specs` / :func:`cache_specs` lift it over whole trees.
+
+Placement policy (tensor-parallel output sharding + expert parallelism):
+
+* dense ``w (d_in, d_out)`` — shard ``d_out`` over the model axis (the
+  forward's output sharding; the unembed all-gathers once per step);
+* SLTrain / low-rank factor ``B (d_in, r)`` — replicated (r is tiny; the
+  eq.-(2) backward psums r-sized results, see ``core/sltrain.py``);
+* factor ``A (r, d_out)`` — shard ``d_out`` over model, matching the
+  dense-w output layout so factored and dense layers compose;
+* support ``v`` / ``cols`` (row-balanced ``(d_in, k)``) — shard ``d_in``
+  over model: the gather in densify is row-local, so the support shards
+  with zero cross-device index traffic;
+* expert-stacked MoE weights — shard the expert dim over model (EP);
+* norms / embeds / biases / routers — replicated.
+
+Every rule is guarded: an axis that does not divide the dim falls back to
+replication for that dim, never an error (heterogeneous archs × meshes).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import compat
+
+MODEL_AXIS = "model"
+BATCH_AXES = ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction (moved from launch/mesh.py)
+# ---------------------------------------------------------------------------
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return compat.make_mesh(shape, axes,
+                            axis_types=(compat.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh():
+    """Single-device mesh with the same axis names (tests / CPU training)."""
+    return compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
+
+
+# ---------------------------------------------------------------------------
+# Ambient-mesh probing (moved from models/common.py)
+# ---------------------------------------------------------------------------
+
+def ambient_mesh():
+    """The mesh jit is tracing under, or None (CPU tests / no context)."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m.axis_names:
+            return m
+    except Exception:
+        pass
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m.axis_names:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def axis_size(mesh, names) -> int:
+    """Product of the sizes of ``names`` (a name or tuple) on ``mesh``;
+    names absent from the mesh count as 1."""
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    return int(np.prod([mesh.shape[a] for a in names if a in mesh.axis_names]
+                       or [1]))
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint that degrades to a no-op when the ambient
+    mesh lacks the named axes or the dims don't divide. spec entries are
+    axis names, tuples of names, or None, one per dim of x."""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    axes = set(mesh.axis_names)
+    clean = []
+    for dim, s in zip(x.shape, spec):
+        names = s if isinstance(s, tuple) else ((s,) if s else ())
+        names = tuple(n for n in names if n in axes)
+        n = axis_size(mesh, names)
+        clean.append(names if (names and dim % n == 0) else None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*clean))
+    except Exception:
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Path → spec rules
+# ---------------------------------------------------------------------------
+
+def _path_keys(path) -> Tuple[str, ...]:
+    """Normalize a tree path (DictKey / SequenceKey / plain objects with a
+    ``.key`` attribute) to a tuple of strings."""
+    out = []
+    for k in path:
+        key = getattr(k, "key", None)
+        if key is None:
+            key = getattr(k, "name", None)
+        if key is None:
+            key = getattr(k, "idx", None)
+        out.append(str(key) if key is not None else str(k))
+    return tuple(out)
+
+
+def _guard(dim: int, mesh, names):
+    """names (as a tuple, filtered to axes the mesh has) if they divide
+    ``dim``, else None (replicate that dim)."""
+    if not names:
+        return None
+    req = names if isinstance(names, tuple) else (names,)
+    tup = tuple(n for n in req if n in mesh.axis_names)
+    if not tup:
+        return None
+    n = axis_size(mesh, tup)
+    return tup if dim % max(n, 1) == 0 else None
+
+
+# leaf name → spec of the TRAILING (matrix) dims; leading dims are the
+# layer-stack (and expert-stack) axes handled separately.
+_REPLICATED_NAMES = frozenset({
+    "bias", "ln_attn", "ln_mlp", "ln_attn_post", "ln_mlp_post", "ln_f",
+    "q_norm", "k_norm", "embed", "lm_head", "W0",
+})
+
+
+def _base_spec(name: str, keys: Tuple[str, ...], trailing: Tuple[int, ...],
+               mesh, model_axis: str):
+    """Spec for the trailing (non-stack) dims of one leaf."""
+    nd = len(trailing)
+    if name in _REPLICATED_NAMES or nd == 0:
+        return (None,) * nd
+    if name == "w":
+        if "router" in keys:                     # routers stay replicated
+            return (None,) * nd
+        if nd >= 2:                              # dense W: TP output shard
+            return (None,) * (nd - 1) + (_guard(trailing[-1], mesh,
+                                                model_axis),)
+        return (None,) * nd
+    if name == "B":                              # (d_in, r): replicated
+        return (None,) * nd
+    if name == "A":                              # (r, d_out): TP output shard
+        return (None,) * (nd - 1) + (_guard(trailing[-1], mesh, model_axis),)
+    if name in ("v", "cols", "rows"):
+        if nd >= 2:                              # row-balanced (d_in, k):
+            return (_guard(trailing[0], mesh,    # shard d_in rows
+                           model_axis),) + (None,) * (nd - 1)
+        return (None,) * nd                      # iid COO (nnz,): replicate
+    return (None,) * nd
+
+
+_MATRIX_NDIM = {"w": 2, "B": 2, "A": 2, "cols": 2, "v": 2, "W0": 2,
+                "embed": 2, "lm_head": 2}
+
+
+def spec_for_param(path, leaf, mesh, *, model_axis: str = MODEL_AXIS,
+                   support_layout: Optional[str] = None) -> P:
+    """PartitionSpec for one parameter/const leaf addressed by tree path.
+
+    Handles the layer-stack convention (scan-over-layers prepends a layer
+    axis to every leaf) and the expert-stack convention (MoE experts add a
+    second leading axis, sharded over the model axis = EP).
+
+    ``support_layout`` disambiguates SLTrain support leaves whose shapes
+    collide once layer-stacked — row-balanced ``(d_in, k)`` vs an iid COO
+    ``(nnz,)`` stacked to ``(L, nnz)``: pass ``"iid"`` or
+    ``"row_balanced"`` when known (:func:`param_specs` infers it from the
+    presence of a sibling ``rows`` leaf); None assumes row-balanced, the
+    repo default.
+    """
+    keys = _path_keys(path)
+    name = keys[-1] if keys else ""
+    ndim = leaf.ndim
+    shape = tuple(leaf.shape)
+
+    base_nd = min(_MATRIX_NDIM.get(name, 1), ndim)
+    if name in ("v", "rows", "cols") and ndim >= 1:
+        # row-balanced support is 2-D (d_in, k); iid COO support is 1-D
+        # (nnz,) — layer stacking makes the two indistinguishable by shape
+        if support_layout == "iid" or name == "rows":
+            base_nd = 1
+        else:
+            base_nd = min(2, ndim)
+
+    n_lead = ndim - base_nd
+    trailing = shape[n_lead:]
+
+    lead = [None] * n_lead
+    used_model = False
+    if "experts" in keys and n_lead >= 1:
+        # the expert axis is the innermost leading dim (layer stacks are
+        # prepended outside it): (L, E, ...) or (E, ...)
+        e_spec = _guard(shape[n_lead - 1], mesh, model_axis)
+        if e_spec is not None:
+            lead[n_lead - 1] = e_spec
+            used_model = True
+
+    if used_model:
+        base = (None,) * base_nd      # model axis already used for EP
+    else:
+        base = _base_spec(name, keys, trailing, mesh, model_axis)
+    return P(*(tuple(lead) + tuple(base)))
+
+
+def param_specs(params, mesh, *, model_axis: str = MODEL_AXIS):
+    """PartitionSpec pytree mirroring ``params`` (works on abstract trees)."""
+    all_paths = {_path_keys(p) for p, _ in
+                 jax.tree_util.tree_flatten_with_path(params)[0]}
+
+    def spec(path, leaf):
+        keys = _path_keys(path)
+        layout = None
+        if keys and keys[-1] in ("v", "cols", "rows"):
+            # an iid COO support dict carries a sibling "rows" leaf;
+            # row-balanced stores implicit rows and has none
+            layout = ("iid" if keys[:-1] + ("rows",) in all_paths
+                      else "row_balanced")
+        return spec_for_param(path, leaf, mesh, model_axis=model_axis,
+                              support_layout=layout)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def batch_specs(batch, mesh, batch_axes: Sequence[str] = BATCH_AXES):
+    """Shard the leading (batch) dim of every leaf over ``batch_axes``."""
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        lead = _guard(leaf.shape[0], mesh, axes)
+        return P(lead, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, batch)
+
+
+def opt_state_specs(opt_state, p_specs, mesh):
+    """Specs for an optimizer-state tree.
+
+    Moment trees that mirror the param tree (AdamW's mu/nu) inherit the
+    param leaf's spec; quantized / projected state whose shapes diverge
+    (8-bit codes+scales, GaLore factors) and scalars are replicated.
+    """
+    by_path = {}
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+            p_specs, is_leaf=lambda x: isinstance(x, P))[0]:
+        by_path[_path_keys(path)] = spec
+
+    def spec(path, leaf):
+        keys = _path_keys(path)
+        for i in range(1, len(keys)):
+            cand = by_path.get(keys[i:])
+            if cand is not None and len(cand) <= leaf.ndim:
+                return cand
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, opt_state)
+
+
+def cache_specs(cache, mesh, batch_axes: Sequence[str] = BATCH_AXES,
+                *, model_axis: str = MODEL_AXIS,
+                seq_sharded: bool = False):
+    """KV-cache specs: leaves are (..., batch, seq, heads, head_dim).
+
+    Batch shards over the batch axes; heads shard over the model axis when
+    they divide (the TP attention layout); ``seq_sharded=True`` moves the
+    model axis to the sequence dim instead (long-context decode)."""
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def spec(leaf):
+        if leaf.ndim < 4:
+            return P(*([None] * leaf.ndim))
+        n_lead = leaf.ndim - 4
+        b, s, h, _ = leaf.shape[n_lead:]
+        if seq_sharded:
+            tail = (_guard(b, mesh, axes), _guard(s, mesh, model_axis),
+                    None, None)
+        else:
+            tail = (_guard(b, mesh, axes), None,
+                    _guard(h, mesh, model_axis), None)
+        return P(*([None] * n_lead + list(tail)))
+
+    return jax.tree.map(spec, cache)
+
+
+def named_shardings(mesh, spec_tree):
+    """Map a PartitionSpec pytree to NamedShardings on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def place(tree, mesh, specs=None):
+    """device_put a pytree onto ``mesh`` per a spec tree.
+
+    ``specs`` defaults to the :func:`param_specs` rules — callers placing
+    non-param trees (KV caches, optimizer state) pass the matching spec
+    tree explicitly. The single placement helper every consumer (trainer,
+    serve engine) goes through, so the spec↔sharding pairing lives here.
+    """
+    if specs is None:
+        specs = param_specs(tree, mesh)
+    return jax.device_put(tree, named_shardings(mesh, specs))

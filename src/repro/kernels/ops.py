@@ -183,7 +183,10 @@ def sl_decode(x, B, A, v_t, rows_t, cols_t, scale: float, *,
     pad_m = (-m) % bm
     pad_k = (-k) % 128
     xp = jnp.pad(xf, ((0, pad_m), (0, pad_k)))
-    y_lr = ((xf @ B) @ A) * jnp.asarray(scale, x.dtype)
+    # low-rank term in f32 (bf16 intermediate rounding drifts from the
+    # densified path — same accumulation fix as core.sltrain sparse mode)
+    y_lr = ((xf.astype(jnp.float32) @ B.astype(jnp.float32))
+            @ A.astype(jnp.float32)) * scale
     y_sp = sd_kernel.sparse_matmul(xp, v_t, rows_t, cols_t, bm=bm,
                                    interpret=interp)[:m, :n]
-    return (y_lr + y_sp.astype(x.dtype)).reshape(*lead, n)
+    return (y_lr + y_sp.astype(jnp.float32)).astype(x.dtype).reshape(*lead, n)

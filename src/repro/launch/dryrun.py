@@ -24,28 +24,25 @@ import time
 import traceback
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.analysis import roofline as roofline_lib
 from repro.configs.base import SHAPE_CELLS, OptimizerConfig, ShapeCell
 from repro.dist import sharding as sharding_lib
+from repro.dist.sharding import make_production_mesh, named_shardings as _ns
 from repro.launch import specs
-from repro.launch.mesh import make_production_mesh
 from repro.models import registry
 from repro.optim import optimizers
 from repro.train import step as step_lib
 
 
-def _ns(mesh, spec_tree):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
-                        is_leaf=lambda x: isinstance(x, P))
-
-
 def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
                remat: str = "none", mesh=None, cfg_overrides=None,
-               verbose: bool = True):
+               verbose: bool = True, with_compiled: bool = False):
     """Lower + compile one (arch × cell) on the production mesh. Returns a
-    result dict (memory analysis, cost analysis, roofline terms)."""
+    result dict (memory analysis, cost analysis, roofline terms); with
+    ``with_compiled=True`` returns ``(result, compiled)`` so diagnostics
+    (scripts/top_collectives.py) can walk the post-SPMD HLO text."""
     cfg_overrides = dict(cfg_overrides or {})
     param_mode = cfg_overrides.pop("param_mode", None)
     cfg = registry.get_config(arch, **cfg_overrides)
@@ -57,7 +54,8 @@ def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
     mesh = mesh if mesh is not None else make_production_mesh(
         multi_pod=multi_pod)
     chips = mesh.devices.size
-    batch_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    batch_axes = tuple(a for a in sharding_lib.BATCH_AXES
+                       if a in mesh.axis_names)
 
     params_abs, consts_abs = api.init(cfg, key=None)      # abstract init
     p_specs = sharding_lib.param_specs(params_abs, mesh)
@@ -154,6 +152,8 @@ def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
               f"-> {r['bottleneck']}-bound, frac={r['roofline_fraction']:.2f} "
               f"useful={r['useful_ratio']:.2f}")
         print(f"  collectives: {result['collectives']['counts']}")
+    if with_compiled:
+        return result, compiled
     return result
 
 

@@ -1,22 +1,14 @@
-"""Production mesh definitions (deliverable (e)).
+"""Production mesh definitions — thin forwarder.
 
-A FUNCTION, not a module-level constant — importing this module never
-touches jax device state (required so smoke tests see 1 device while the
-dry-run sees 512)."""
+Mesh construction is owned by :mod:`repro.dist.sharding` (built through
+the version-portable :mod:`repro.dist.compat` layer); this module keeps
+the historical ``repro.launch.mesh`` import path alive. Both are
+FUNCTIONS, not module-level constants — importing never touches jax
+device state (required so smoke tests see 1 device while the dry-run
+sees 512)."""
 from __future__ import annotations
 
-import jax
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-
-
-def make_local_mesh():
-    """Single-device mesh with the same axis names (tests / CPU training)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.dist.sharding import (  # noqa: F401
+    make_local_mesh,
+    make_production_mesh,
+)

@@ -28,6 +28,9 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--sparse-decode", action="store_true",
                     help="factored SLTrain decode (DESIGN §3 beyond-paper)")
+    ap.add_argument("--use-mesh", action="store_true",
+                    help="place weights/cache via repro.dist.sharding on "
+                         "the named local mesh")
     args = ap.parse_args(argv)
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
@@ -40,9 +43,13 @@ def main(argv=None):
         tree, _ = cm.restore({"params": params}, allow_config_change=True)
         params = tree["params"]
 
+    mesh = None
+    if args.use_mesh:
+        from repro.dist import sharding as dist_sharding
+        mesh = dist_sharding.make_local_mesh()
     eng = ServeEngine(cfg, params, consts, n_slots=args.slots,
                       max_len=args.max_len,
-                      sparse_decode=args.sparse_decode)
+                      sparse_decode=args.sparse_decode, mesh=mesh)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):

@@ -69,7 +69,13 @@ def main(argv=None):
     ap.add_argument("--multipod", action="store_true",
                     help="initialize jax.distributed from JAX_* env vars "
                          "(scripts/launch_multipod.sh sets them)")
+    ap.add_argument("--use-mesh", action="store_true",
+                    help="run under the named local mesh and place state "
+                         "via the repro.dist.sharding spec engine")
     args = ap.parse_args(argv)
+    if args.use_mesh and args.multipod:
+        ap.error("--use-mesh builds the single-process local mesh and "
+                 "cannot be combined with --multipod")
 
     if args.multipod:
         import os
@@ -79,8 +85,13 @@ def main(argv=None):
             num_processes=int(os.environ["JAX_NUM_PROCESSES"]),
             process_id=int(os.environ["JAX_PROCESS_ID"]))
 
+    mesh = None
+    if args.use_mesh:
+        from repro.dist import sharding as dist_sharding
+        mesh = dist_sharding.make_local_mesh()
+
     tc = build_train_config(args)
-    trainer = Trainer(tc)
+    trainer = Trainer(tc, mesh=mesh)
     state = trainer.run()
     print(f"final step {state.step}: "
           f"loss={trainer.metrics_history[-1]['loss']:.4f}")

@@ -126,45 +126,12 @@ def apply_linear(cfg: ModelConfig, params, consts, x, adapted: bool = True):
 
 # ---------------------------------------------------------------------------
 # Ambient-mesh sharding constraints (§Perf: SP / attention layouts)
+#
+# Owned by repro.dist.sharding; re-exported here because every model file
+# already imports them from common.
 # ---------------------------------------------------------------------------
 
-def ambient_mesh():
-    """The mesh jit is tracing under, or None (CPU tests / no context)."""
-    try:
-        m = jax.sharding.get_abstract_mesh()
-        if m.axis_names:
-            return m
-    except Exception:
-        pass
-    try:
-        from jax._src.mesh import thread_resources
-        m = thread_resources.env.physical_mesh
-        if m.axis_names:
-            return m
-    except Exception:
-        pass
-    return None
-
-
-def constrain(x, *spec):
-    """with_sharding_constraint that degrades to a no-op when the ambient
-    mesh lacks the named axes or the dims don't divide. spec entries are
-    axis names, tuples of names, or None, one per dim of x."""
-    mesh = ambient_mesh()
-    if mesh is None:
-        return x
-    axes = set(mesh.axis_names)
-    clean = []
-    for dim, s in zip(x.shape, spec):
-        names = s if isinstance(s, tuple) else ((s,) if s else ())
-        names = tuple(n for n in names if n in axes)
-        n = int(np.prod([mesh.shape[a] for a in names])) if names else 1
-        clean.append(names if (names and dim % n == 0) else None)
-    from jax.sharding import PartitionSpec as _P
-    try:
-        return jax.lax.with_sharding_constraint(x, _P(*clean))
-    except Exception:
-        return x
+from repro.dist.sharding import ambient_mesh, constrain  # noqa: E402,F401
 
 
 def rms_norm(x, weight, eps: float = 1e-6, plus_one: bool = False):

@@ -150,33 +150,26 @@ def _window_for(cfg, kind: str) -> int:
 def _sp_constraint(cfg, h):
     """Sequence-parallel residual constraint (§Perf): shard (B, S, d) as
     P(batch_axes, "model", None) when the ambient mesh has those axes and
-    the dims divide. No-op on meshes without a model axis (CPU tests)."""
+    the dims divide. No-op on meshes without a model axis (CPU tests).
+
+    All-or-nothing on purpose: if either the batch or the seq dim fails
+    to divide, skip the constraint entirely — a partial (seq-only) pin
+    would de-shard the surrounding remat region (the §Perf it.6 lesson
+    recorded in core/sltrain.py)."""
     if not cfg.seq_shard_activations:
         return h
-    axes = ()
-    try:  # new-style ambient mesh (jax.sharding.use_mesh)
-        mesh = jax.sharding.get_abstract_mesh()
-        axes = mesh.axis_names
-    except Exception:
-        pass
-    if not axes:
-        try:  # legacy `with mesh:` context
-            from jax._src.mesh import thread_resources
-            mesh = thread_resources.env.physical_mesh
-            axes = mesh.axis_names
-        except Exception:
-            return h
-    if not axes or "model" not in axes:
+    from repro.dist import sharding as dist_sharding
+    mesh = dist_sharding.ambient_mesh()
+    if mesh is None or dist_sharding.MODEL_AXIS not in mesh.axis_names:
         return h
-    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
-    import numpy as _np
-    nb = int(_np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes else 1
-    nm = mesh.shape["model"]
+    batch_axes = tuple(a for a in dist_sharding.BATCH_AXES
+                       if a in mesh.axis_names)
+    nb = dist_sharding.axis_size(mesh, batch_axes)
+    nm = dist_sharding.axis_size(mesh, dist_sharding.MODEL_AXIS)
     if h.shape[0] % max(nb, 1) or h.shape[1] % nm:
         return h
-    from jax.sharding import PartitionSpec as _P
-    spec = _P(batch_axes if batch_axes else None, "model", None)
-    return jax.lax.with_sharding_constraint(h, spec)
+    return dist_sharding.constrain(h, batch_axes,
+                                   dist_sharding.MODEL_AXIS, None)
 
 
 def apply_lm(cfg: ModelConfig, params, consts, tokens, *, patch_embeds=None,

@@ -36,7 +36,7 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, consts, *, n_slots: int = 4,
-                 max_len: int = 256, sparse_decode: bool = False):
+                 max_len: int = 256, sparse_decode: bool = False, mesh=None):
         if sparse_decode and cfg.param.mode == "sltrain":
             cfg = dataclasses.replace(
                 cfg, param=dataclasses.replace(cfg.param, exec_mode="sparse"))
@@ -46,12 +46,28 @@ class ServeEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.cache = self.api.init_cache(cfg, n_slots, max_len)
+        self.mesh = mesh
+        if mesh is not None:
+            # place weights + KV cache per the dist.sharding spec engine
+            # (TP output sharding, heads-sharded cache); decode steps then
+            # trace under the mesh so ambient constraints apply.
+            from repro.dist import sharding as dist_sharding
+            self.params = dist_sharding.place(self.params, mesh)
+            self.consts = dist_sharding.place(self.consts, mesh)
+            self.cache = dist_sharding.place(
+                self.cache, mesh, dist_sharding.cache_specs(self.cache, mesh))
         self.pos = np.zeros(n_slots, dtype=np.int32)       # next position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.queue: List[Request] = []
         self._uid = 0
-        self._decode = jax.jit(step_lib.make_serve_step(cfg, self.api))
+        self._decode_fn = jax.jit(step_lib.make_serve_step(cfg, self.api))
         self._steps = 0
+
+    def _decode(self, *args):
+        if self.mesh is None:
+            return self._decode_fn(*args)
+        with self.mesh:
+            return self._decode_fn(*args)
 
     # -- API --------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16) -> Request:

@@ -106,13 +106,14 @@ def make_compressed_dp_step(cfg: ModelConfig, api: ModelApi,
     with full precision locally (pjit handles intra-pod sharding inside the
     body on real hardware; here the body is the whole per-pod step), then
     the pods exchange int8-quantized gradients — 4× less DCI wire than f32
-    psum, exact int32 summation on the wire (dist/compression.py).
+    psum, exact local int32 summation of the gathered codes
+    (dist/compression.py).
 
     Params/opt-state are replicated across pods (DP); the batch shards.
     """
-    import numpy as _np
     from jax.sharding import PartitionSpec as P
 
+    from repro.dist import compat
     from repro.dist.compression import psum_tree
 
     loss_fn = make_loss_fn(cfg, api, "none", aux_coef)
@@ -138,7 +139,7 @@ def make_compressed_dp_step(cfg: ModelConfig, api: ModelApi,
         return jax.tree.map(spec, tree)
 
     def step(params, opt_state, consts, batch):
-        return jax.shard_map(
+        return compat.shard_map(
             body, mesh=mesh,
             in_specs=(specs_like(params), specs_like(opt_state),
                       specs_like(consts), specs_like(batch, True)),

@@ -13,6 +13,7 @@ The loop is deliberately framework-grade rather than script-grade:
 """
 from __future__ import annotations
 
+import contextlib
 import signal
 import sys
 import time
@@ -141,6 +142,27 @@ class Trainer:
         opt_state = self.optimizer.init(params)
         return TrainerState(params, opt_state, consts, step=0)
 
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def _place(self, state: TrainerState) -> TrainerState:
+        """Place state on the mesh per the dist.sharding spec engine (no-op
+        without a mesh). Params/consts get the param rules; optimizer
+        moments inherit the matching param leaf's spec."""
+        if self.mesh is None:
+            return state
+        from repro.dist import sharding as dist_sharding
+        mesh = self.mesh
+        p_specs = dist_sharding.param_specs(state.params, mesh)
+        return TrainerState(
+            dist_sharding.place(state.params, mesh, p_specs),
+            dist_sharding.place(
+                state.opt_state, mesh,
+                dist_sharding.opt_state_specs(state.opt_state, p_specs,
+                                              mesh)),
+            dist_sharding.place(state.consts, mesh),
+            state.step)
+
     def save(self, state: TrainerState, background: Optional[bool] = None) -> None:
         bg = self.tc.async_ckpt if background is None else background
         self.ckpt.save(
@@ -180,6 +202,7 @@ class Trainer:
         total = steps if steps is not None else tc.steps
         if state is None:
             state = self.restore_or_init()
+        state = self._place(state)
         self._install_signal_handlers()
         while state.step < total:
             if self.fault_hook:
@@ -187,8 +210,9 @@ class Trainer:
             batch_np = self.data.next_batch()
             batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
             t0 = time.perf_counter()
-            params, opt_state, metrics = self._train_step(
-                state.params, state.opt_state, state.consts, batch)
+            with self._mesh_ctx():
+                params, opt_state, metrics = self._train_step(
+                    state.params, state.opt_state, state.consts, batch)
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             state = TrainerState(params, opt_state, state.consts,

@@ -1,0 +1,79 @@
+"""Minimal stand-in for ``hypothesis`` on environments without it.
+
+Implements just the surface the test suite uses — ``given``, ``settings``
+and the ``strategies`` factories — as a deterministic seeded loop: each
+example draws its values from a PRNG keyed on (test name, example index),
+so runs are reproducible and failures name a stable example. No
+shrinking, no database; for exploratory power install the real
+``hypothesis`` (see requirements-dev.txt) — the test modules prefer it
+automatically when importable.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def given(**strats):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                seed = zlib.crc32(f"{fn.__module__}.{fn.__name__}:{i}"
+                                  .encode())
+                rng = np.random.default_rng(seed)
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {i}: "
+                        f"{drawn!r}") from e
+        # pytest resolves parameters via inspect.signature, which follows
+        # __wrapped__ back to fn and would treat the drawn arguments as
+        # fixtures; present the zero-arg wrapper signature instead.
+        del wrapper.__wrapped__
+        wrapper._max_examples = _DEFAULT_MAX_EXAMPLES
+        return wrapper
+    return decorate
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        if hasattr(fn, "_max_examples"):
+            fn._max_examples = max_examples
+        return fn
+    return decorate

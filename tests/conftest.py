@@ -1,0 +1,9 @@
+"""Shared test setup: put ``src`` on sys.path and install the jax
+forward-compat shims (``jax.shard_map``, ``jax.sharding.AxisType``,
+``make_mesh(axis_types=...)``) before any test module touches jax."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+import repro.dist  # noqa: E402,F401  (import side effect: compat shims)

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pinned env ships no hypothesis: seeded-loop shim
+    from _propshim import given, settings, strategies as st
 
 from repro.configs.base import OptimizerConfig
 from repro.core import relora

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pinned env ships no hypothesis: seeded-loop shim
+    from _propshim import given, settings, strategies as st
 
 from repro.core import sltrain, support
 
@@ -148,12 +152,18 @@ def test_residual_memory_is_factored():
 
     # linearize exposes the residual pytree sizes
     _, vjp = jax.vjp(f, params)
-    res_bytes = sum(x.size * x.dtype.itemsize
-                    for x in jax.tree.leaves(jax.tree.map(lambda a: a, vjp)))
+    leaves = jax.tree.leaves(jax.tree.map(lambda a: a, vjp))
+    res_bytes = sum(x.size * x.dtype.itemsize for x in leaves)
     dense_W_bytes = d_in * d_out * 4
     factored = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
-    # residuals ≈ params + x, far below storing W per token-batch
-    assert res_bytes <= factored + x.size * 4 + dense_W_bytes * 0 + 4096, \
+    # no residual may have W's (d_in, d_out) shape — the densified matrix
+    # must stay a transient (the paper's memory claim)
+    assert not any(l.shape == (d_in, d_out) and l.dtype.itemsize >= 2
+                   for l in leaves), "densified W saved as a residual"
+    # residuals ≈ params + x (x appears twice: once as the custom-vjp
+    # residual aliasing the input, once as jax.vjp's closure const copy),
+    # far below storing W per token-batch
+    assert res_bytes <= factored + 2 * x.size * 4 + 4096, \
         f"residuals {res_bytes}B suggest densified W was saved"
 
 
