@@ -1,9 +1,16 @@
 #!/usr/bin/env bash
 # One-command regression gate: tier-1 tests + core smoke + a host-mesh
-# dry-run through the repro.dist spec engine. Run from anywhere.
+# dry-run through the repro.dist spec engine + a paged serve smoke.
+# Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if ! python -c "import hypothesis" 2>/dev/null; then
+  echo "!! NOTICE: hypothesis is not installed — property tests will run"
+  echo "!! on the seeded-loop fallback in tests/_propshim.py (no shrinking,"
+  echo "!! fixed examples). Install requirements-dev.txt for full coverage."
+fi
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q
@@ -13,5 +20,9 @@ python scripts/smoke_core.py
 
 echo "== dry-run: llama_60m x train_4k on the 256-chip host mesh =="
 python -m repro.launch.dryrun --arch llama_60m --cell train_4k
+
+echo "== serve smoke: paged KV engine, 3 staggered requests =="
+python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8 \
+  --requests 3 --stagger --slots 2 --new-tokens 4 --max-len 64
 
 echo "ci_check: all gates passed"

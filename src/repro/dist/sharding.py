@@ -288,24 +288,36 @@ def opt_state_specs(opt_state, p_specs, mesh):
 
 def cache_specs(cache, mesh, batch_axes: Sequence[str] = BATCH_AXES,
                 *, model_axis: str = MODEL_AXIS,
-                seq_sharded: bool = False):
-    """KV-cache specs: leaves are (..., batch, seq, heads, head_dim).
+                seq_sharded: bool = False, paged: bool = False):
+    """KV-cache specs.
 
-    Batch shards over the batch axes; heads shard over the model axis when
-    they divide (the TP attention layout); ``seq_sharded=True`` moves the
-    model axis to the sequence dim instead (long-context decode)."""
+    Contiguous layout (default): leaves are (..., batch, seq, heads,
+    head_dim). Batch shards over the batch axes; heads shard over the
+    model axis when they divide (the TP attention layout);
+    ``seq_sharded=True`` moves the model axis to the sequence dim instead
+    (long-context decode).
+
+    Paged layout (``paged=True``, serve/kv.py): leaves are pools
+    (..., n_blocks, block_len, heads, head_dim) with no batch dim — every
+    slot shares the pool through its block table. Heads shard over the
+    model axis (same TP attention layout as contiguous: the gathered
+    per-slot view inherits it); the block and block_len dims stay
+    replicated so any device can serve any slot's pages without cross-host
+    index traffic."""
     axes = tuple(a for a in batch_axes if a in mesh.axis_names)
 
     def spec(leaf):
         if leaf.ndim < 4:
             return P(*([None] * leaf.ndim))
         n_lead = leaf.ndim - 4
-        b, s, h, _ = leaf.shape[n_lead:]
-        if seq_sharded:
-            tail = (_guard(b, mesh, axes), _guard(s, mesh, model_axis),
+        d0, d1, h, _ = leaf.shape[n_lead:]
+        if paged:
+            tail = (None, None, _guard(h, mesh, model_axis), None)
+        elif seq_sharded:
+            tail = (_guard(d0, mesh, axes), _guard(d1, mesh, model_axis),
                     None, None)
         else:
-            tail = (_guard(b, mesh, axes), None,
+            tail = (_guard(d0, mesh, axes), None,
                     _guard(h, mesh, model_axis), None)
         return P(*([None] * n_lead + list(tail)))
 

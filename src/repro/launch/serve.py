@@ -4,6 +4,8 @@ requests through the continuous-batching engine.
 Usage:
   python -m repro.launch.serve --arch llama_60m --smoke --requests 8
   python -m repro.launch.serve --arch llama_60m --smoke --sparse-decode
+  python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8
+  python -m repro.launch.serve --arch llama_60m --smoke --paged --stagger
 """
 from __future__ import annotations
 
@@ -28,6 +30,14 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--sparse-decode", action="store_true",
                     help="factored SLTrain decode (DESIGN §3 beyond-paper)")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache with batched prefill and "
+                         "per-slot decode positions (serve/kv.py)")
+    ap.add_argument("--block-len", type=int, default=16,
+                    help="tokens per KV block (paged only)")
+    ap.add_argument("--stagger", action="store_true",
+                    help="submit requests one engine step apart (exercises "
+                         "diverging per-slot positions)")
     ap.add_argument("--use-mesh", action="store_true",
                     help="place weights/cache via repro.dist.sharding on "
                          "the named local mesh")
@@ -49,19 +59,33 @@ def main(argv=None):
         mesh = dist_sharding.make_local_mesh()
     eng = ServeEngine(cfg, params, consts, n_slots=args.slots,
                       max_len=args.max_len,
-                      sparse_decode=args.sparse_decode, mesh=mesh)
+                      sparse_decode=args.sparse_decode, mesh=mesh,
+                      paged=args.paged, block_len=args.block_len)
     rng = np.random.default_rng(0)
-    reqs = []
+    prompts = []
     for i in range(args.requests):
         plen = int(rng.integers(2, 8))
-        prompt = rng.integers(3, cfg.vocab_size, size=plen).tolist()
-        reqs.append(eng.submit(prompt, max_new_tokens=args.new_tokens))
+        prompts.append(rng.integers(3, cfg.vocab_size, size=plen).tolist())
     t0 = time.perf_counter()
+    reqs = []
+    if args.stagger:
+        it = iter(prompts)
+        reqs.append(eng.submit(next(it), max_new_tokens=args.new_tokens))
+        for p in it:
+            eng.step()
+            reqs.append(eng.submit(p, max_new_tokens=args.new_tokens))
+    else:
+        reqs = [eng.submit(p, max_new_tokens=args.new_tokens)
+                for p in prompts]
     stats = eng.run_until_drained()
     dt = time.perf_counter() - t0
+    assert len(stats["completed"]) == len(reqs) and not stats["exhausted"], \
+        (len(stats["completed"]), stats["exhausted"])
     total_toks = sum(len(r.out) for r in reqs)
+    mode = "paged" if args.paged else "legacy"
     print(f"served {len(reqs)} requests, {total_toks} tokens in {dt:.2f}s "
           f"({total_toks/dt:.1f} tok/s, {stats['decode_steps']} decode steps,"
+          f" {eng.dispatches['prefill']} prefill dispatches, {mode},"
           f" sparse_decode={args.sparse_decode})")
     for r in reqs[:4]:
         print(f"  req {r.uid}: prompt {r.prompt} -> {r.out}")

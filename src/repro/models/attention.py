@@ -43,7 +43,8 @@ def _split_heads(x, n_heads, head_dim):
 
 def _attend(cfg: ModelConfig, q, k, v, q_pos, k_pos, *, causal, window,
             q_chunk: int = 1024):
-    """q: (B,Sq,H,hd); k,v: (B,Sk,Hkv,hd); positions: (Sq,), (Sk,)."""
+    """q: (B,Sq,H,hd); k,v: (B,Sk,Hkv,hd); positions: (Sq,) or (B,Sq) for
+    q_pos (per-slot decode positions), (Sk,) for k_pos."""
     bsz, sq, nh, hd = q.shape
     sk, nkv = k.shape[1], k.shape[2]
     group = nh // nkv
@@ -69,12 +70,14 @@ def _attend(cfg: ModelConfig, q, k, v, q_pos, k_pos, *, causal, window,
             s = constrain(s, batch, None, None, "model", None)
         if cfg.attn_logit_softcap > 0:
             s = softcap(s, cfg.attn_logit_softcap)
-        mask = jnp.ones((q_blk.shape[1], sk), dtype=bool)
+        # (B,Sq) q_pos → per-slot mask (B,q,k); (Sq,) → shared (1,q,k)
+        qp = qpos_blk if qpos_blk.ndim == 2 else qpos_blk[None]
+        mask = jnp.ones((qp.shape[0], q_blk.shape[1], sk), dtype=bool)
         if causal:
-            mask &= qpos_blk[:, None] >= k_pos[None, :]
+            mask &= qp[:, :, None] >= k_pos[None, None, :]
         if window > 0:
-            mask &= (qpos_blk[:, None] - k_pos[None, :]) < window
-        s = jnp.where(mask[None, None, None], s, -1e30)
+            mask &= (qp[:, :, None] - k_pos[None, None, :]) < window
+        s = jnp.where(mask[:, None, None], s, -1e30)
         p = jax.nn.softmax(s, axis=-1)
         if sp:
             p = constrain(p, batch, None, None, "model", None)
@@ -84,7 +87,7 @@ def _attend(cfg: ModelConfig, q, k, v, q_pos, k_pos, *, causal, window,
             o = constrain(o, batch, "model", None, None, None)
         return o
 
-    if sp or sq <= q_chunk:
+    if sp or sq <= q_chunk or q_pos.ndim == 2:
         # under SP the per-shard q length is already sq/|model|; chunking
         # with lax.map would slice across the sharded dim and force gathers
         o = block(qg, q_pos)
@@ -103,11 +106,24 @@ def _attend(cfg: ModelConfig, q, k, v, q_pos, k_pos, *, causal, window,
 def apply_attention(cfg: ModelConfig, params, consts, x, *, pos_offset=0,
                     causal: bool = True, window: int = 0,
                     cache: Optional[dict] = None, cache_index=None,
-                    kv_source=None):
+                    kv_source=None, block_table=None, prefill: bool = False):
     """Self- (or cross-, via kv_source) attention.
 
-    cache: {"k","v"} of shape (B, S_max, Hkv, hd); cache_index: scalar int —
-    decode writes k/v at cache_index and attends over the whole cache.
+    cache: {"k","v"}. Contiguous layout (B, S_max, Hkv, hd): decode writes
+    k/v at ``cache_index`` — a scalar (one shared write offset) or a (B,)
+    vector (each slot writes at its own position) — and attends over the
+    whole cache with per-slot causal masking. Paged layout (``block_table``
+    (B, blocks_per_slot) given): pools are (n_blocks, block_len, Hkv, hd);
+    writes scatter through the block table and reads attend the gathered
+    per-slot view (serve/kv.py).
+
+    ``prefill=True`` runs the whole prompt train-style — attention over the
+    just-computed local k/v (O(Sq²), chunked), not the S_max cache — while
+    still writing k/v into the cache at positions [0, Sq). Contiguous
+    prefill writes every batch row, so it is only safe when ALL rows are
+    fresh; the paged path nulls non-admitted rows' table entries instead
+    (their writes land in the null block).
+
     Returns (y, new_cache)."""
     hd = cfg.resolved_head_dim
     nh, nkv = cfg.n_heads, cfg.n_kv_heads
@@ -122,22 +138,53 @@ def apply_attention(cfg: ModelConfig, params, consts, x, *, pos_offset=0,
         q = rms_norm(q, params["q_norm"], cfg.norm_eps)
         k = rms_norm(k, params["k_norm"], cfg.norm_eps)
 
-    q_pos = jnp.arange(sq, dtype=jnp.int32) + pos_offset
+    idx = cache_index if cache_index is not None else pos_offset
+    per_slot = getattr(idx, "ndim", 0) == 1          # (B,) position vector
+    if per_slot:
+        q_pos = idx[:, None] + jnp.arange(sq, dtype=jnp.int32)[None]  # (B,Sq)
+    else:
+        q_pos = jnp.arange(sq, dtype=jnp.int32) + (
+            idx if cache is not None else pos_offset)
     use_rope = cfg.family not in ("whisper",) and kv_source is None
     if use_rope:
-        q = rope(q, q_pos[None], cfg.rope_theta)
+        q = rope(q, q_pos if per_slot else q_pos[None], cfg.rope_theta)
 
     new_cache = cache
     if cache is not None and kv_source is None:
         if use_rope:
-            k = rope(k, q_pos[None], cfg.rope_theta)
-        idx = cache_index if cache_index is not None else pos_offset
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
-        new_cache = {"k": ck, "v": cv}
-        k, v = ck, cv
-        k_pos = jnp.arange(cache["k"].shape[1], dtype=jnp.int32)
-        q_pos = q_pos if cache_index is None else (jnp.arange(sq, dtype=jnp.int32) + cache_index)
+            k = rope(k, q_pos if per_slot else q_pos[None], cfg.rope_theta)
+        if block_table is not None:
+            from repro.serve import kv as kv_lib
+            positions = q_pos if per_slot else \
+                jnp.broadcast_to(q_pos[None], (bsz, sq))
+            ck = kv_lib.scatter(cache["k"], block_table, positions, k)
+            cv = kv_lib.scatter(cache["v"], block_table, positions, v)
+            new_cache = {"k": ck, "v": cv}
+            if not prefill:
+                k = kv_lib.gather_view(ck, block_table)
+                v = kv_lib.gather_view(cv, block_table)
+                k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+            else:
+                k_pos = jnp.arange(sq, dtype=jnp.int32) + idx
+        elif per_slot:
+            rows = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+            cols = idx[:, None] + jnp.arange(sq, dtype=jnp.int32)[None]
+            ck = cache["k"].at[rows, cols].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, cols].set(v.astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck, cv
+            k_pos = jnp.arange(cache["k"].shape[1], dtype=jnp.int32)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+            new_cache = {"k": ck, "v": cv}
+            if prefill:
+                k_pos = q_pos       # attend local k/v, not the S_max cache
+            else:
+                k, v = ck, cv
+                k_pos = jnp.arange(cache["k"].shape[1], dtype=jnp.int32)
     elif kv_source is not None:
         k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
     else:

@@ -50,14 +50,16 @@ def _init_block(b: Builder, cfg: ModelConfig, use_moe: bool, d_ff_dense: int = 0
 
 
 def _apply_block(cfg: ModelConfig, p, c, x, *, window: int, cache=None,
-                 cache_index=None, pos_offset=0):
+                 cache_index=None, pos_offset=0, block_table=None,
+                 prefill: bool = False):
     plus_one = cfg.family in ("gemma2", "vlm")
     act = "gelu" if cfg.family in ("gemma2", "vlm") else "silu"
     norm = lambda t, w: rms_norm(t, w, cfg.norm_eps, plus_one=plus_one)
     h = norm(x, p["ln_attn"])
     a, new_cache = attention.apply_attention(
         cfg, p["attn"], c.get("attn", {}), h, pos_offset=pos_offset,
-        causal=True, window=window, cache=cache, cache_index=cache_index)
+        causal=True, window=window, cache=cache, cache_index=cache_index,
+        block_table=block_table, prefill=prefill)
     if cfg.use_post_norms:
         a = norm(a, p["ln_attn_post"])
     x = x + a
@@ -221,7 +223,14 @@ def apply_lm(cfg: ModelConfig, params, consts, tokens, *, patch_embeds=None,
 # Decode (serve_step)
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, abstract: bool = False):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, abstract: bool = False,
+               *, paged: bool = False, block_len: int = 16, n_blocks: int = 0):
+    """Contiguous KV cache (default): leaves (lead, batch, max_len, Hkv, hd).
+
+    ``paged=True`` builds the block-paged layout instead (serve/kv.py):
+    leaves are block pools (lead, n_blocks, block_len, Hkv, hd) shared by
+    every decode slot through a block table; ``n_blocks`` defaults to full
+    capacity (batch slots × max_len) plus the null block."""
     hd = cfg.resolved_head_dim
     pat = _pattern(cfg)
     n_periods = (cfg.n_layers - (cfg.moe.first_k_dense or 0)) // len(pat)
@@ -232,25 +241,34 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, abstract: bool = Fals
             return jax.ShapeDtypeStruct(shape, dt)
         return jnp.zeros(shape, dt)
 
-    kv = lambda lead: {"k": mk(lead + (batch, max_len, cfg.n_kv_heads, hd)),
-                       "v": mk(lead + (batch, max_len, cfg.n_kv_heads, hd))}
+    if paged:
+        from repro.serve.kv import PagedLayout
+        layout = PagedLayout.plan(batch, max_len, block_len, n_blocks)
+        tail = (layout.n_blocks, layout.block_len, cfg.n_kv_heads, hd)
+    else:
+        tail = (batch, max_len, cfg.n_kv_heads, hd)
+    kv = lambda lead: {"k": mk(lead + tail), "v": mk(lead + tail)}
     cache = {"layers": {f"k{j}": kv((n_periods,)) for j in range(len(pat))}}
     if cfg.moe.first_k_dense:
         cache["dense_layers"] = kv((cfg.moe.first_k_dense,))
     return cache
 
 
-def decode_step(cfg: ModelConfig, params, consts, tokens, cache, index):
-    """One decode step. tokens: (B, 1) int32; index: scalar position.
-    Returns (logits (B, 1, V), new_cache)."""
+def _cached_forward(cfg: ModelConfig, params, consts, tokens, cache, index,
+                    block_table, prefill: bool):
+    """Shared layer-stack walk for decode_step and prefill_step — the two
+    must stay in lockstep (same dense-prefix scan, same period scan, same
+    final norm/unembed), so the walk exists exactly once."""
     h = _embed_tokens(cfg, params, tokens)
     pat = _pattern(cfg)
+    blk = lambda x, p, c, kv, window: _apply_block(
+        cfg, p, c, x, window=window, cache=kv, cache_index=index,
+        block_table=block_table, prefill=prefill)
 
     if "dense_layers" in params:
         def dense_body(x, layer):
             p, c, kv = layer
-            x, nkv, _ = _apply_block(cfg, p, c, x, window=0, cache=kv,
-                                     cache_index=index)
+            x, nkv, _ = blk(x, p, c, kv, 0)
             return x, nkv
         h, new_kv = jax.lax.scan(dense_body, h,
                                  (params["dense_layers"],
@@ -262,9 +280,8 @@ def decode_step(cfg: ModelConfig, params, consts, tokens, cache, index):
         p, c, kv = layer
         new_kv = {}
         for j, kind in enumerate(pat):
-            x, nk, _ = _apply_block(cfg, p[f"k{j}"], c.get(f"k{j}", {}), x,
-                                    window=_window_for(cfg, kind),
-                                    cache=kv[f"k{j}"], cache_index=index)
+            x, nk, _ = blk(x, p[f"k{j}"], c.get(f"k{j}", {}), kv[f"k{j}"],
+                           _window_for(cfg, kind))
             new_kv[f"k{j}"] = nk
         return x, new_kv
 
@@ -276,3 +293,30 @@ def decode_step(cfg: ModelConfig, params, consts, tokens, cache, index):
     h = rms_norm(h, params["ln_f"], cfg.norm_eps,
                  plus_one=cfg.family in ("gemma2", "vlm"))
     return _unembed(cfg, params, h), cache
+
+
+def decode_step(cfg: ModelConfig, params, consts, tokens, cache, index,
+                *, block_table=None):
+    """One decode step. tokens: (B, 1) int32; index: scalar position shared
+    by the batch, or a (B,) vector — each slot writes/attends at its own
+    position. ``block_table`` (B, blocks_per_slot) switches the cache leaves
+    to the paged-pool layout (serve/kv.py). Returns (logits, new_cache)."""
+    return _cached_forward(cfg, params, consts, tokens, cache, index,
+                           block_table, prefill=False)
+
+
+def prefill_step(cfg: ModelConfig, params, consts, tokens, cache,
+                 *, block_table=None):
+    """Batched prefill: run the whole prompt batch (B, S) through the
+    train-style chunked-attention forward ONCE, writing K/V for positions
+    [0, S) into the cache as each layer computes them. Returns
+    (logits (B, S, V), new_cache) — logits[s, len_s - 1] scores the first
+    generated token of slot s.
+
+    All rows start at position 0 (fresh slots). With ``block_table``, rows
+    that must not be written (slots mid-decode in the same batch) are
+    protected by nulling their table rows — see serve/kv.py. Without a
+    block table the contiguous cache is written on EVERY row, so only call
+    it when the whole batch is fresh."""
+    return _cached_forward(cfg, params, consts, tokens, cache, jnp.int32(0),
+                           block_table, prefill=True)

@@ -17,6 +17,9 @@ class ModelApi:
     apply: Callable         # (cfg, params, consts, batch, remat) -> (logits, aux)
     init_cache: Callable    # (cfg, batch, max_len, abstract) -> cache
     decode_step: Callable   # (cfg, params, consts, tokens, cache, index) -> (logits, cache)
+    # batched whole-prompt forward that also writes K/V; None on families
+    # without one (the serve engine's paged path requires it)
+    prefill_step: Optional[Callable] = None
 
 
 def _lm_api():
@@ -26,7 +29,8 @@ def _lm_api():
         return lm.apply_lm(cfg, params, consts, batch["tokens"],
                            patch_embeds=batch.get("patches"), remat=remat)
 
-    return ModelApi(lm.init_lm, apply, lm.init_cache, lm.decode_step)
+    return ModelApi(lm.init_lm, apply, lm.init_cache, lm.decode_step,
+                    lm.prefill_step)
 
 
 def _hybrid_api():

@@ -1,1 +1,3 @@
 from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.kv import BlockTable, PagedLayout  # noqa: F401
+from repro.serve.scheduler import Scheduler  # noqa: F401

@@ -1,14 +1,36 @@
-"""Batched serving engine with continuous batching over fixed slots.
+"""Serving engine: continuous batching over fixed slots, with a paged KV
+cache, batched prefill, and per-slot decode positions.
 
-The engine keeps a fixed decode batch of ``n_slots`` sequences; finished
-or empty slots are refilled from the request queue (continuous batching —
-the decode step never waits for the longest request). Each slot carries
-its own position counter; attention masking uses per-slot lengths, so one
-jit'd ``decode_fn`` serves heterogeneous requests.
+Two cache layouts share the engine API:
 
-SLTrain tie-in (DESIGN §3, beyond-paper): the engine can run the model
+* ``paged=True`` (the production path) — K/V lives in block pools
+  (serve/kv.py) addressed through a per-slot block table; a scheduler
+  (serve/scheduler.py) assigns slots, allocates/frees blocks as sequences
+  grow and finish, and shapes the two jit'd programs. **Prefill is
+  batched**: every admitted prompt runs through one train-style
+  chunked-attention forward that scatters K/V into the slot's pages and
+  emits each request's first token — O(1) dispatches per admission batch
+  instead of O(prompt_len) per request. **Decode is per-slot**: each
+  active slot writes at its own position via a ``(n_slots,)`` index
+  vector, so a lagging slot never scatters K/V at another slot's offset.
+* ``paged=False`` (legacy reference) — one contiguous ``(n_slots,
+  max_len)`` cache, slot-wise prefill through the decode step, and a
+  single shared ``max(pos)`` write index. Kept as the baseline the paged
+  path is benchmarked against (benchmarks/serve_bench.py) and for its
+  original tests; its shared-index wart is exactly what the per-slot
+  vector removes.
+
+SLTrain tie-in (DESIGN §3, beyond-paper): either layout can run the model
 with ``param.exec_mode="sparse"`` so decode reads only the factored
 parameter bytes — the paper's compression ratio becomes decode bandwidth.
+The paged layout makes KV *accounting* proportional to live tokens —
+blocks alloc/free as requests grow and finish, so the pool can be
+oversubscribed (``n_blocks`` below worst case) and backpressure/preempt
+instead of reserving ``n_slots × max_len`` per request. The DEFAULT pool
+is still allocated at full capacity up front, and the decode step
+materializes the gathered ``(n_slots, view_len)`` per-slot K/V view per
+layer as a transient, so peak decode memory matches the contiguous cache
+until a paged-attention kernel lands (see ROADMAP "Serving").
 """
 from __future__ import annotations
 
@@ -22,6 +44,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
+from repro.serve.kv import PagedLayout
+from repro.serve.scheduler import Scheduler
 from repro.train import step as step_lib
 
 
@@ -32,11 +56,18 @@ class Request:
     max_new_tokens: int = 16
     out: List[int] = field(default_factory=list)
     done: bool = False
+    # preemption state (paged engine): prompt + generated tokens to
+    # recompute on readmission, and a no-progress counter that bounds
+    # evict/readmit cycles on a hopelessly undersized pool
+    resume: Optional[List[int]] = None
+    stalls: int = 0
+    _progress_mark: int = -1
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, consts, *, n_slots: int = 4,
-                 max_len: int = 256, sparse_decode: bool = False, mesh=None):
+                 max_len: int = 256, sparse_decode: bool = False, mesh=None,
+                 paged: bool = False, block_len: int = 16, n_blocks: int = 0):
         if sparse_decode and cfg.param.mode == "sltrain":
             cfg = dataclasses.replace(
                 cfg, param=dataclasses.replace(cfg.param, exec_mode="sparse"))
@@ -45,61 +76,195 @@ class ServeEngine:
         self.api = registry.get_api(cfg)
         self.n_slots = n_slots
         self.max_len = max_len
-        self.cache = self.api.init_cache(cfg, n_slots, max_len)
+        self.paged = paged
+        if paged:
+            if self.api.prefill_step is None:
+                raise ValueError(f"family {cfg.family!r} has no prefill_step;"
+                                 " the paged engine requires one")
+            layout = PagedLayout.plan(n_slots, max_len, block_len, n_blocks)
+            self.layout = layout
+            self.cache = self.api.init_cache(cfg, n_slots, max_len,
+                                             paged=True, block_len=block_len,
+                                             n_blocks=layout.n_blocks)
+            self.sched = Scheduler(n_slots, max_len, layout)
+            self._prefill_fn = jax.jit(step_lib.make_prefill_step(cfg, self.api))
+        else:
+            self.cache = self.api.init_cache(cfg, n_slots, max_len)
+            self.sched = None
         self.mesh = mesh
         if mesh is not None:
             # place weights + KV cache per the dist.sharding spec engine
-            # (TP output sharding, heads-sharded cache); decode steps then
-            # trace under the mesh so ambient constraints apply.
+            # (TP output sharding, heads-sharded cache); steps then trace
+            # under the mesh so ambient constraints apply.
             from repro.dist import sharding as dist_sharding
             self.params = dist_sharding.place(self.params, mesh)
             self.consts = dist_sharding.place(self.consts, mesh)
             self.cache = dist_sharding.place(
-                self.cache, mesh, dist_sharding.cache_specs(self.cache, mesh))
+                self.cache, mesh,
+                dist_sharding.cache_specs(self.cache, mesh, paged=paged))
         self.pos = np.zeros(n_slots, dtype=np.int32)       # next position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.queue: List[Request] = []
+        self.completed: List[Request] = []
+        self._parked = False          # any active slot waiting for blocks
         self._uid = 0
         self._decode_fn = jax.jit(step_lib.make_serve_step(cfg, self.api))
         self._steps = 0
+        # jit dispatch counters (benchmarks/serve_bench.py reads these to
+        # show batched prefill is O(1) dispatches per admission batch)
+        self.dispatches = {"prefill": 0, "decode": 0}
 
-    def _decode(self, *args):
+    def _run(self, fn, *args):
         if self.mesh is None:
-            return self._decode_fn(*args)
+            return fn(*args)
         with self.mesh:
-            return self._decode_fn(*args)
+            return fn(*args)
 
     # -- API --------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16) -> Request:
+        """Queue a request. Invalid prompts are rejected HERE so a bad
+        request can never wedge the engine from inside step()."""
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.max_len:
+            raise ValueError(f"prompt of {len(prompt)} tokens ≥ max_len "
+                             f"{self.max_len}")
+        if self.paged:
+            from repro.serve.kv import blocks_for
+            need = blocks_for(len(prompt) + 1, self.layout.block_len)
+            usable = self.layout.n_blocks - 1
+            if need > usable:
+                # admit() is FIFO with break-on-first-misfit: a request the
+                # WHOLE pool cannot hold would starve everything behind it
+                raise ValueError(
+                    f"prompt needs {need} blocks but the pool only has "
+                    f"{usable}: raise n_blocks or shorten the prompt")
         self._uid += 1
         req = Request(self._uid, list(prompt), max_new_tokens)
-        self.queue.append(req)
+        if self.paged:
+            self.sched.submit(req)
+        else:
+            self.queue.append(req)
         return req
 
+    def _complete(self, req: Request) -> None:
+        req.done = True
+        self.completed.append(req)
+
+    # -- paged path ---------------------------------------------------------
+    def _admit_paged(self) -> None:
+        """Admit queued requests and run ONE batched prefill over them.
+        While any active slot is parked for blocks, admission pauses so
+        freed blocks reach the parked slots first (otherwise an evicted
+        request could readmit into them and starve the parked slot)."""
+        if self._parked and self.sched.active_slots:
+            return
+        admitted = self.sched.admit()
+        if not admitted:
+            return
+        tokens, lengths, table = self.sched.build_prefill(admitted)
+        self.dispatches["prefill"] += 1
+        first, _, self.cache = self._run(
+            self._prefill_fn, self.params, self.consts, jnp.asarray(tokens),
+            self.cache, jnp.asarray(lengths), jnp.asarray(table))
+        first = np.asarray(first)
+        self.sched.finish_prefill(admitted)
+        for s, req in admitted:
+            tok = int(first[s, 0])
+            if req.resume is None:
+                req.out = [tok]
+            else:
+                # recompute after preemption: the re-prefilled context is
+                # prompt + out, so this sample regenerates the token the
+                # eviction trimmed (greedy decode is deterministic)
+                req.out.append(tok)
+                req.resume = None
+            if len(req.out) >= req.max_new_tokens:
+                self._complete(req)
+                self.sched.finish(s)
+
+    def _evict_for_progress(self, active) -> None:
+        """All active slots are parked: preempt the youngest request so the
+        others can grow (scheduler.preempt_youngest does the state moves);
+        the engine only decides WHEN preemption is futile and fails loud."""
+        if len(active) == 1 and not self.sched.queue:
+            raise RuntimeError(
+                "paged KV pool too small for the active request: "
+                f"{self.sched.blocks.free_blocks} free blocks and nothing "
+                "left to evict — raise n_blocks or lower max_len")
+        req = self.sched.preempt_youngest()
+        total = len(req.prompt) + len(req.out)
+        req.stalls = req.stalls + 1 if total <= req._progress_mark else 0
+        req._progress_mark = total
+        if req.stalls >= 3:
+            raise RuntimeError(
+                f"request {req.uid} evicted {req.stalls} times without "
+                "progress: the pool cannot hold the working set — raise "
+                "n_blocks or lower n_slots/max_len")
+
+    def _step_paged(self) -> int:
+        self._admit_paged()
+        active = self.sched.active_slots
+        if not active:
+            return 0
+        # grow pages for this step's write; slots the pool cannot hold are
+        # parked (they retry once other requests release blocks)
+        ready = set(self.sched.ensure_decode_blocks(active))
+        self._parked = bool(set(active) - ready)
+        if not ready:
+            self._evict_for_progress(active)
+            return 0
+        tok = np.zeros((self.n_slots, 1), np.int32)
+        for s in active:
+            tok[s, 0] = self.sched.slot_req[s].out[-1]
+        pos_vec = self.sched.decode_positions()
+        self.dispatches["decode"] += 1
+        nxt, _, self.cache = self._run(
+            self._decode_fn, self.params, self.consts, jnp.asarray(tok),
+            self.cache, jnp.asarray(pos_vec),
+            jnp.asarray(self.sched.table()))
+        nxt = np.asarray(nxt)
+        self._steps += 1
+        for s in sorted(ready):
+            req = self.sched.slot_req[s]
+            req.out.append(int(nxt[s, 0]))
+            self.sched.advance(s)
+            if len(req.out) >= req.max_new_tokens or \
+                    int(self.sched.pos[s]) >= self.max_len - 1:
+                self._complete(req)
+                self.sched.finish(s)
+        return len(ready)
+
+    # -- legacy contiguous path ----------------------------------------------
     def _prefill(self, slot: int, req: Request) -> None:
-        """Prefill by stepping the prompt through decode (slot-local). A
-        production engine would batch-prefill; slot-wise keeps the jit'd
-        program count at one for this reference engine."""
+        """Prefill by stepping the prompt through decode (slot-local) —
+        O(prompt_len) dispatches; the paged path replaces this with one
+        batched prefill_step. The last prompt step's prediction seeds
+        ``req.out`` (the request's first generated token), matching the
+        paged prefill's semantics."""
         self.pos[slot] = 0
+        nxt = None
         for t in req.prompt:
             tok = np.zeros((self.n_slots, 1), np.int32)
             tok[slot, 0] = t
-            _, _, self.cache = self._decode(
-                self.params, self.consts, jnp.asarray(tok), self.cache,
-                jnp.int32(self.pos[slot]))
+            self.dispatches["prefill"] += 1
+            nxt, _, self.cache = self._run(
+                self._decode_fn, self.params, self.consts, jnp.asarray(tok),
+                self.cache, jnp.int32(self.pos[slot]))
             self.pos[slot] += 1
-        req.out = []
+        req.out = [int(np.asarray(nxt)[slot, 0])]
 
     def _refill(self) -> None:
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self._prefill(s, req)
-                self.slot_req[s] = req
+                if len(req.out) >= req.max_new_tokens:
+                    self._complete(req)
+                else:
+                    self.slot_req[s] = req
 
-    def step(self) -> int:
-        """One batched decode step over all active slots. Returns the number
-        of active slots stepped."""
+    def _step_legacy(self) -> int:
         self._refill()
         active = [s for s in range(self.n_slots) if self.slot_req[s]]
         if not active:
@@ -107,15 +272,16 @@ class ServeEngine:
         tok = np.zeros((self.n_slots, 1), np.int32)
         for s in active:
             req = self.slot_req[s]
-            hist = req.prompt + req.out
-            tok[s, 0] = hist[-1]
-        # NOTE single shared index: reference engine steps slots at their own
-        # pos via per-slot prefill; decode uses the max pos (KV slots beyond a
-        # short request hold zeros — masked by causal length in attention).
+            tok[s, 0] = req.out[-1]
+        # NOTE single shared index: the legacy engine steps slots at their
+        # own pos via per-slot prefill; decode uses the max pos (a lagging
+        # slot's K/V is written at that offset — the wart the paged path's
+        # per-slot index vector removes).
         idx = int(max(self.pos[s] for s in active))
-        nxt, _, self.cache = self._decode(self.params, self.consts,
-                                          jnp.asarray(tok), self.cache,
-                                          jnp.int32(idx))
+        self.dispatches["decode"] += 1
+        nxt, _, self.cache = self._run(
+            self._decode_fn, self.params, self.consts, jnp.asarray(tok),
+            self.cache, jnp.int32(idx))
         nxt = np.asarray(nxt)
         self._steps += 1
         for s in active:
@@ -124,14 +290,35 @@ class ServeEngine:
             self.pos[s] += 1
             if len(req.out) >= req.max_new_tokens or \
                     self.pos[s] >= self.max_len - 1:
-                req.done = True
+                self._complete(req)
                 self.slot_req[s] = None
         return len(active)
 
+    def step(self) -> int:
+        """One engine step: admit + (batched prefill) + one batched decode
+        over all active slots. Returns the number of slots stepped."""
+        return self._step_paged() if self.paged else self._step_legacy()
+
+    def _has_work(self) -> bool:
+        if self.paged:
+            return self.sched.has_work
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
     def run_until_drained(self, max_steps: int = 10_000) -> Dict[str, Any]:
-        done: List[Request] = []
+        """Step until every request finished (or ``max_steps`` ran out).
+
+        Returns {"decode_steps": int, "completed": [Request, ...],
+        "exhausted": bool} — ``exhausted`` is True when max_steps was used
+        up with requests still queued or mid-decode."""
         for _ in range(max_steps):
-            n = self.step()
-            if n == 0 and not self.queue:
+            if not self._has_work():
                 break
-        return {"decode_steps": self._steps}
+            self.step()
+        exhausted = self._has_work()
+        if exhausted:
+            import warnings
+            warnings.warn(f"run_until_drained: max_steps={max_steps} "
+                          "exhausted with work still queued")
+        return {"decode_steps": self._steps,
+                "completed": list(self.completed),
+                "exhausted": exhausted}

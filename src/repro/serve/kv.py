@@ -1,0 +1,159 @@
+"""Block-paged KV cache: pool, block table, and jit gather/scatter.
+
+The contiguous cache reserves ``n_slots × max_len`` KV rows per layer up
+front; short requests waste most of it. The paged layout instead keeps a
+**pool** of fixed-size blocks per layer, shaped
+``(n_blocks, block_len, n_kv_heads, head_dim)``, shared by every slot. A
+per-slot **block table** ``(n_slots, blocks_per_slot) int32`` maps a
+slot's logical block index (position // block_len) to a physical block in
+the pool; blocks are allocated as a sequence grows and returned to the
+free list when the request finishes, so resident KV scales with live
+tokens, not with ``n_slots × max_len``.
+
+Physical block 0 is the **null block**: every unallocated table entry
+points at it, so a scatter past a slot's allocated region (prompt padding
+in a batched prefill, idle decode slots) lands in garbage that is never
+attended to — positions beyond a slot's length are causally masked, and
+real writes always precede the first read of their position. This keeps
+the jit'd gather/scatter free of bounds logic.
+
+Device-side helpers (:func:`gather_view`, :func:`scatter`) are pure jnp
+gathers/scatters usable inside jit/scan; host-side allocation lives in
+:class:`BlockTable`. The model never sees paging — attention receives the
+gathered ``(n_slots, blocks_per_slot · block_len, H, hd)`` view, which is
+exactly the contiguous layout with ``max_len = blocks_per_slot·block_len``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def blocks_for(n_tokens: int, block_len: int) -> int:
+    """Blocks needed to hold ``n_tokens`` positions."""
+    return max(0, -(-n_tokens // block_len))
+
+
+@dataclass(frozen=True)
+class PagedLayout:
+    """Static shape of one paged pool (per layer-stack leaf)."""
+    n_blocks: int          # physical blocks in the pool (incl. null block 0)
+    block_len: int         # tokens per block
+    blocks_per_slot: int   # block-table width = ceil(max_len / block_len)
+
+    @property
+    def view_len(self) -> int:
+        """Sequence length of the gathered per-slot view."""
+        return self.blocks_per_slot * self.block_len
+
+    @staticmethod
+    def plan(n_slots: int, max_len: int, block_len: int,
+             n_blocks: int = 0) -> "PagedLayout":
+        """Default pool: full capacity (every slot at max_len) + null block.
+        Pass ``n_blocks`` to oversubscribe (fewer blocks than worst case)."""
+        per_slot = blocks_for(max_len, block_len)
+        return PagedLayout(n_blocks or (1 + n_slots * per_slot), block_len,
+                           per_slot)
+
+
+# ---------------------------------------------------------------------------
+# Device side: gather / scatter (pure, jit-safe)
+# ---------------------------------------------------------------------------
+
+def gather_view(pool, table):
+    """Contiguous per-slot view of a paged pool.
+
+    pool: (n_blocks, block_len, H, hd); table: (n_slots, blocks_per_slot)
+    int32 → (n_slots, blocks_per_slot · block_len, H, hd). Unallocated
+    entries read the null block — callers mask by per-slot length (the
+    causal mask does this for free: garbage sits at positions the query
+    has not reached)."""
+    g = jnp.take(pool, table, axis=0)      # (S, bps, bl, H, hd)
+    return g.reshape(g.shape[0], -1, *pool.shape[2:])
+
+
+def scatter(pool, table, positions, new):
+    """Write per-slot tokens into their pages.
+
+    pool: (n_blocks, block_len, H, hd); table: (n_slots, blocks_per_slot);
+    positions: (n_slots, S) int32 logical positions; new: (n_slots, S, H,
+    hd). Returns the updated pool. Positions mapping to unallocated table
+    entries land in the null block (duplicate writes there are benign)."""
+    bl = pool.shape[1]
+    phys = jnp.take_along_axis(table, positions // bl, axis=1)  # (n_slots,S)
+    flat_idx = (phys * bl + positions % bl).reshape(-1)
+    flat = pool.reshape(-1, *pool.shape[2:])
+    flat = flat.at[flat_idx].set(
+        new.reshape(-1, *new.shape[2:]).astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+# ---------------------------------------------------------------------------
+# Host side: block allocation
+# ---------------------------------------------------------------------------
+
+class BlockTable:
+    """Host-side block table + free-list allocator over a shared pool.
+
+    One table serves every layer: layer pools are stacked leaves of the
+    cache pytree, and a physical block id indexes the same slot's pages in
+    each of them. Block 0 is reserved as the null block and never
+    allocated."""
+
+    def __init__(self, layout: PagedLayout, n_slots: int):
+        self.layout = layout
+        self.n_slots = n_slots
+        self.table = np.zeros((n_slots, layout.blocks_per_slot), np.int32)
+        self._n_alloc = np.zeros(n_slots, np.int32)   # allocated per slot
+        self._free: List[int] = list(range(layout.n_blocks - 1, 0, -1))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.layout.n_blocks - 1 - len(self._free)
+
+    def can_fit(self, n_tokens: int) -> bool:
+        return blocks_for(n_tokens, self.layout.block_len) <= len(self._free)
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot`` to hold ``n_tokens`` positions; False if the pool
+        is exhausted (caller backpressures the request queue)."""
+        need = blocks_for(n_tokens, self.layout.block_len)
+        if need > self.layout.blocks_per_slot:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens exceed "
+                f"{self.layout.view_len} (blocks_per_slot × block_len)")
+        have = int(self._n_alloc[slot])
+        if need <= have:
+            return True
+        if need - have > len(self._free):
+            return False
+        for j in range(have, need):
+            self.table[slot, j] = self._free.pop()
+        self._n_alloc[slot] = need
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return every block of ``slot`` to the free list."""
+        n = int(self._n_alloc[slot])
+        for j in range(n):
+            self._free.append(int(self.table[slot, j]))
+            self.table[slot, j] = 0
+        self._n_alloc[slot] = 0
+
+    def rows(self, slots) -> np.ndarray:
+        """Table restricted to ``slots``: other rows are nulled so a
+        batched prefill cannot clobber live pages of mid-decode slots."""
+        out = np.zeros_like(self.table)
+        for s in slots:
+            out[s] = self.table[s]
+        return out
+
+    def as_array(self) -> jnp.ndarray:
+        return jnp.asarray(self.table)

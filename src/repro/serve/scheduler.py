@@ -1,0 +1,166 @@
+"""Slot scheduler for the paged serve engine: admission, batched prefill
+shaping, per-slot decode positions, and block lifecycle.
+
+The scheduler is pure host-side bookkeeping — it never touches device
+arrays except to build the int32 inputs of the two jit'd programs:
+
+* **Admission** (:meth:`admit`): queued requests are matched to free slots
+  as long as their prompt fits the block pool; admitted prompts are padded
+  to a shared power-of-two bucket length, so the batched prefill compiles
+  once per bucket instead of once per prompt length. Rows of the prefill
+  batch that belong to slots mid-decode get nulled block-table rows —
+  their (garbage) writes land in the null block, never on live pages.
+* **Decode shaping** (:meth:`decode_positions`): each active slot steps at
+  its OWN position; idle slots sit at 0 with a nulled table row. This is
+  the fix for the legacy engine's shared ``max(pos)`` write offset, where
+  a lagging slot's K/V was scattered at another slot's position.
+* **Block lifecycle**: blocks are allocated lazily as positions cross
+  block boundaries (:meth:`ensure_decode_blocks`) and returned to the free
+  list the moment a request finishes (:meth:`finish`) or its slot is
+  preempted (:meth:`evict` — the engine requeues the request with its
+  progress folded into ``resume`` and recomputes it later), so resident
+  KV tracks live tokens.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.kv import BlockTable, PagedLayout, blocks_for
+
+
+def _bucket(n: int, minimum: int) -> int:
+    """Smallest power-of-two ≥ n (and ≥ minimum) — bounds prefill
+    recompiles at log2(max_len) program shapes."""
+    b = max(minimum, 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def _ptoks(req) -> List[int]:
+    """The tokens a (re-)admission must prefill: the original prompt, or
+    prompt + generated-so-far for a preempted request (``resume``)."""
+    return req.prompt if getattr(req, "resume", None) is None else req.resume
+
+
+class Scheduler:
+    """Owns slots, the request queue, and the block table."""
+
+    def __init__(self, n_slots: int, max_len: int, layout: PagedLayout,
+                 *, min_prefill_bucket: int = 8):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.blocks = BlockTable(layout, n_slots)
+        self.pos = np.zeros(n_slots, np.int32)       # next write position
+        self.slot_req: List[Optional[object]] = [None] * n_slots
+        self.queue: List[object] = []
+        self.min_prefill_bucket = min_prefill_bucket
+
+    # -- admission ------------------------------------------------------------
+    def submit(self, req) -> None:
+        self.queue.append(req)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [s for s in range(self.n_slots) if self.slot_req[s] is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+    def admit(self) -> List[Tuple[int, object]]:
+        """Move queued requests into free slots, allocating their prompt
+        blocks. Stops at the first request the pool cannot hold (FIFO, no
+        reordering) — it stays queued and retries after blocks free up.
+        Prompt-length validation is the engine's job (submit time)."""
+        admitted = []
+        for s in range(self.n_slots):
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            plen = len(_ptoks(req))
+            if not self.blocks.can_fit(plen):
+                break
+            self.queue.pop(0)
+            self.blocks.ensure(s, plen)
+            self.slot_req[s] = req
+            self.pos[s] = 0
+            admitted.append((s, req))
+        return admitted
+
+    def build_prefill(self, admitted) -> Tuple[np.ndarray, np.ndarray,
+                                               np.ndarray]:
+        """(tokens (n_slots, bucket), lengths (n_slots,), table rows) for
+        one batched prefill over the admitted slots. Non-admitted rows
+        carry zero tokens, length 1, and a nulled table row. The bucket is
+        capped at view_len so padded positions always stay inside the
+        block-table width — the null-block guarantee in kv.scatter must
+        never depend on out-of-bounds gather semantics."""
+        bucket = min(_bucket(max(len(_ptoks(r)) for _, r in admitted),
+                             self.min_prefill_bucket),
+                     self.blocks.layout.view_len)
+        tokens = np.zeros((self.n_slots, bucket), np.int32)
+        lengths = np.ones(self.n_slots, np.int32)
+        for s, req in admitted:
+            toks = _ptoks(req)
+            tokens[s, :len(toks)] = toks
+            lengths[s] = len(toks)
+        table = self.blocks.rows([s for s, _ in admitted])
+        return tokens, lengths, table
+
+    def finish_prefill(self, admitted) -> None:
+        for s, req in admitted:
+            self.pos[s] = len(_ptoks(req))
+
+    # -- decode ---------------------------------------------------------------
+    def ensure_decode_blocks(self, slots) -> List[int]:
+        """Grow each slot's pages to hold one more position; returns the
+        slots that actually have room (pool exhaustion parks the rest —
+        they retry next step after other requests release blocks)."""
+        ready = []
+        for s in slots:
+            if self.blocks.ensure(s, int(self.pos[s]) + 1):
+                ready.append(s)
+        return ready
+
+    def decode_positions(self) -> np.ndarray:
+        """(n_slots,) per-slot write positions; idle slots report 0 (their
+        table row is all null block — writes are discarded)."""
+        return self.pos.copy()
+
+    def table(self) -> np.ndarray:
+        return self.blocks.table
+
+    def advance(self, slot: int) -> None:
+        self.pos[slot] += 1
+
+    def finish(self, slot: int) -> None:
+        """Release the slot and every block it held."""
+        self.blocks.release(slot)
+        self.slot_req[slot] = None
+        self.pos[slot] = 0
+
+    def evict(self, slot: int):
+        """Preempt ``slot``: free its blocks and hand its request back to
+        the engine (which requeues it for recompute)."""
+        req = self.slot_req[slot]
+        self.blocks.release(slot)
+        self.slot_req[slot] = None
+        self.pos[slot] = 0
+        return req
+
+    def preempt_youngest(self):
+        """Evict the most recently submitted active request, fold its
+        progress into ``resume`` (minus the not-yet-consumed last output
+        token — greedy decode regenerates it exactly on readmission) and
+        put it back at the queue head. Returns the request so the caller
+        can apply its no-progress policy. All queue/slot/block mutations
+        stay inside the scheduler."""
+        victim = max(self.active_slots, key=lambda s: self.slot_req[s].uid)
+        req = self.evict(victim)
+        req.resume = req.prompt + req.out[:-1]
+        req.out = req.out[:-1]
+        self.queue.insert(0, req)
+        return req

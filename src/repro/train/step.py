@@ -72,11 +72,21 @@ def make_train_step(cfg: ModelConfig, api: ModelApi, optimizer: Optimizer,
 
 def make_serve_step(cfg: ModelConfig, api: ModelApi, *, greedy: bool = True,
                     temperature: float = 1.0):
-    """serve_step(params, consts, tokens, cache, index, rng) ->
-    (next_tokens (B,1), logits, new_cache). One batched decode step."""
-    def serve_step(params, consts, tokens, cache, index, rng=None):
-        logits, new_cache = api.decode_step(cfg, params, consts, tokens,
-                                            cache, index)
+    """serve_step(params, consts, tokens, cache, index, block_table, rng) ->
+    (next_tokens (B,1), logits, new_cache). One batched decode step.
+
+    ``index`` is a scalar (legacy shared offset) or a (B,) per-slot position
+    vector; ``block_table`` (B, blocks_per_slot) switches the cache to the
+    paged layout (serve/kv.py)."""
+    def serve_step(params, consts, tokens, cache, index, block_table=None,
+                   rng=None):
+        if block_table is None:
+            logits, new_cache = api.decode_step(cfg, params, consts, tokens,
+                                                cache, index)
+        else:
+            logits, new_cache = api.decode_step(cfg, params, consts, tokens,
+                                                cache, index,
+                                                block_table=block_table)
         last = logits[:, -1, :cfg.vocab_size].astype(jnp.float32)
         if greedy:
             nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
@@ -84,6 +94,33 @@ def make_serve_step(cfg: ModelConfig, api: ModelApi, *, greedy: bool = True,
             nxt = jax.random.categorical(rng, last / temperature).astype(jnp.int32)
         return nxt[:, None], logits, new_cache
     return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, api: ModelApi, *, greedy: bool = True,
+                      temperature: float = 1.0):
+    """prefill_step(params, consts, tokens, cache, lengths, block_table,
+    rng) -> (first_tokens (B,1), logits, new_cache).
+
+    One jit'd call runs a whole batch of prompts (B, S) through the
+    train-style forward, writes K/V for positions [0, S) and samples each
+    slot's FIRST output token from logits[s, lengths[s]-1] — replacing
+    O(prompt_len) per-token decode dispatches with O(1) per admitted batch.
+    Rows are padded to a shared S; padding positions are never attended by
+    valid queries (causal mask) and their pages are overwritten by decode
+    before they first become visible."""
+    def prefill_step(params, consts, tokens, cache, lengths, block_table=None,
+                     rng=None):
+        logits, new_cache = api.prefill_step(cfg, params, consts, tokens,
+                                             cache, block_table=block_table)
+        rows = jnp.arange(tokens.shape[0], dtype=jnp.int32)
+        last_idx = jnp.clip(lengths - 1, 0, tokens.shape[1] - 1)
+        last = logits[rows, last_idx, :cfg.vocab_size].astype(jnp.float32)
+        if greedy:
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(rng, last / temperature).astype(jnp.int32)
+        return nxt[:, None], logits, new_cache
+    return prefill_step
 
 
 def make_eval_step(cfg: ModelConfig, api: ModelApi):

@@ -159,6 +159,48 @@ def test_cache_specs_batch_and_heads():
         assert spec[-3] is None            # seq replicated (not seq_sharded)
 
 
+def test_cache_specs_paged_heads_sharded_blocks_replicated():
+    """Paged pools (lead, n_blocks, block_len, heads, hd): heads take the
+    model axis (TP attention layout carries over to the gathered view);
+    the block and block_len dims stay replicated."""
+    mesh = shl.make_local_mesh()
+    cfg = registry.get_smoke_config("llama_60m")
+    api = registry.get_api(cfg)
+    cache = api.init_cache(cfg, 2, 32, abstract=True, paged=True,
+                           block_len=8)
+    specs = shl.cache_specs(cache, mesh, paged=True)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    assert flat, "empty paged cache spec tree"
+    for path, spec in flat:
+        assert spec[-2] == ("model",), (path, spec)   # heads sharded (TP)
+        assert spec[-4] is None and spec[-3] is None  # pages replicated
+        assert spec[-1] is None
+    # indivisible heads fall back to replication, never an error. The spec
+    # engine only reads axis_names/shape, so a 2-wide stand-in mesh works
+    # on a 1-device CPU.
+    import dataclasses
+
+    class _TPMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 1, "model": 2}
+
+    cfg3 = dataclasses.replace(cfg, n_heads=3, n_kv_heads=3, d_model=48)
+    cache3 = api.init_cache(cfg3, 2, 32, abstract=True, paged=True,
+                            block_len=8)
+    for _, spec in jax.tree_util.tree_flatten_with_path(
+            shl.cache_specs(cache3, _TPMesh(), paged=True),
+            is_leaf=lambda x: isinstance(x, P))[0]:
+        assert spec[-2] is None
+    # and 4 kv-heads on the same 2-wide mesh do shard
+    cache4 = api.init_cache(cfg, 2, 32, abstract=True, paged=True,
+                            block_len=8)
+    for _, spec in jax.tree_util.tree_flatten_with_path(
+            shl.cache_specs(cache4, _TPMesh(), paged=True),
+            is_leaf=lambda x: isinstance(x, P))[0]:
+        assert spec[-2] == ("model",)
+
+
 # ---------------------------------------------------------------------------
 # compression
 # ---------------------------------------------------------------------------

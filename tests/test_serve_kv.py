@@ -1,0 +1,347 @@
+"""Tests for the paged KV-cache subsystem (serve/kv.py, serve/scheduler.py)
+and the rewritten serve engine: allocator lifecycle, jit gather/scatter
+roundtrip, batched prefill vs per-token decode equivalence, per-slot decode
+positions, and the staggered-arrival regression for the legacy engine's
+shared-max(pos) bug."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.serve import kv as kv_lib
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Scheduler, _bucket
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = registry.get_smoke_config("llama_60m")
+    api = registry.get_api(cfg)
+    params, consts = api.init(cfg, jax.random.PRNGKey(0), seed=0)
+    return cfg, api, params, consts
+
+
+# ---------------------------------------------------------------------------
+# Block table / allocator
+# ---------------------------------------------------------------------------
+
+def test_block_table_alloc_free_reuse():
+    layout = kv_lib.PagedLayout.plan(n_slots=2, max_len=32, block_len=8)
+    assert layout.blocks_per_slot == 4 and layout.n_blocks == 9  # + null
+    bt = kv_lib.BlockTable(layout, n_slots=2)
+    assert bt.free_blocks == 8 and bt.blocks_in_use == 0
+    assert bt.ensure(0, 9)                 # 2 blocks
+    assert bt.blocks_in_use == 2
+    assert (bt.table[0, :2] > 0).all() and (bt.table[0, 2:] == 0).all()
+    assert bt.ensure(0, 9)                 # idempotent: no regrow
+    assert bt.blocks_in_use == 2
+    used = set(bt.table[0, :2].tolist())
+    bt.release(0)
+    assert bt.blocks_in_use == 0 and (bt.table[0] == 0).all()
+    bt.ensure(1, 32)                       # freed blocks are reused
+    assert used <= set(bt.table[1].tolist())
+
+
+def test_block_table_exhaustion_and_overflow():
+    layout = kv_lib.PagedLayout.plan(2, 32, 8, n_blocks=3)  # 2 usable
+    bt = kv_lib.BlockTable(layout, n_slots=2)
+    assert bt.ensure(0, 16)                # both blocks
+    assert not bt.ensure(1, 8)             # pool exhausted → backpressure
+    assert not bt.can_fit(1)
+    bt.release(0)
+    assert bt.ensure(1, 8)
+    with pytest.raises(ValueError):        # beyond table width
+        bt.ensure(1, 33)
+
+
+def test_block_table_rows_nulls_unlisted_slots():
+    layout = kv_lib.PagedLayout.plan(3, 16, 8)
+    bt = kv_lib.BlockTable(layout, n_slots=3)
+    bt.ensure(0, 16)
+    bt.ensure(2, 8)
+    rows = bt.rows([2])
+    assert (rows[0] == 0).all() and (rows[1] == 0).all()
+    assert (rows[2] == bt.table[2]).all()
+
+
+def test_prefill_bucket_rounds_to_pow2():
+    assert _bucket(3, 8) == 8
+    assert _bucket(9, 8) == 16
+    assert _bucket(16, 8) == 16
+
+
+# ---------------------------------------------------------------------------
+# Device gather / scatter
+# ---------------------------------------------------------------------------
+
+def test_scatter_gather_roundtrip_jit():
+    layout = kv_lib.PagedLayout.plan(2, 24, 8)
+    bt = kv_lib.BlockTable(layout, n_slots=2)
+    bt.ensure(0, 24)
+    bt.ensure(1, 16)
+    pool = jnp.zeros((layout.n_blocks, layout.block_len, 2, 4), jnp.float32)
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.standard_normal((2, 16, 2, 4)), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32)[None],
+                                 (2, 16))
+    table = bt.as_array()
+    scatter = jax.jit(kv_lib.scatter)
+    gather = jax.jit(kv_lib.gather_view)
+    pool = scatter(pool, table, positions, vals)
+    view = gather(pool, table)
+    assert view.shape == (2, layout.view_len, 2, 4)
+    np.testing.assert_array_equal(np.asarray(view[:, :16]), np.asarray(vals))
+    # null block protects unallocated writes: a row with a nulled table
+    # never sees another row's data
+    null_rows = jnp.zeros_like(table)
+    v2 = gather(pool, null_rows)
+    expect = np.tile(np.asarray(pool[0]), (layout.blocks_per_slot, 1, 1))
+    np.testing.assert_array_equal(np.asarray(v2),
+                                  np.broadcast_to(expect[None], v2.shape))
+
+
+def test_scatter_per_slot_positions_diverge():
+    """Each slot writes at its OWN position — the per-slot index fix."""
+    layout = kv_lib.PagedLayout.plan(2, 16, 4)
+    bt = kv_lib.BlockTable(layout, 2)
+    bt.ensure(0, 8)
+    bt.ensure(1, 3)
+    pool = jnp.zeros((layout.n_blocks, 4, 1, 1), jnp.float32)
+    table = bt.as_array()
+    pos = jnp.asarray([[7], [2]], jnp.int32)        # diverging positions
+    vals = jnp.asarray([[[[1.0]]], [[[2.0]]]])
+    view = kv_lib.gather_view(kv_lib.scatter(pool, table, pos, vals), table)
+    assert float(view[0, 7, 0, 0]) == 1.0 and float(view[0, 2, 0, 0]) == 0.0
+    assert float(view[1, 2, 0, 0]) == 2.0 and float(view[1, 7, 0, 0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Batched prefill == per-token decode (model level)
+# ---------------------------------------------------------------------------
+
+def test_paged_prefill_matches_token_by_token_decode(model):
+    cfg, api, params, consts = model
+    from repro.train import step as step_lib
+    toks = np.asarray([[5, 9, 11, 2, 7, 3]], np.int32)
+    max_len = 16
+
+    # reference: contiguous cache, one token at a time
+    cache = api.init_cache(cfg, 1, max_len)
+    for t in range(toks.shape[1]):
+        ref_logits, cache = api.decode_step(
+            cfg, params, consts, jnp.asarray(toks[:, t:t + 1]), cache,
+            jnp.int32(t))
+
+    # paged: one batched prefill writes all K/V and scores the last token
+    layout = kv_lib.PagedLayout.plan(1, max_len, 4)
+    bt = kv_lib.BlockTable(layout, 1)
+    bt.ensure(0, toks.shape[1])
+    pcache = api.init_cache(cfg, 1, max_len, paged=True, block_len=4)
+    prefill = jax.jit(step_lib.make_prefill_step(cfg, api))
+    first, logits, pcache = prefill(params, consts, jnp.asarray(toks), pcache,
+                                    jnp.asarray([toks.shape[1]], jnp.int32),
+                                    bt.as_array())
+    np.testing.assert_allclose(
+        np.asarray(logits[:, -1], np.float32),
+        np.asarray(ref_logits[:, 0], np.float32), atol=0.02, rtol=0.02)
+
+    # and the caches agree: next decode step produces identical tokens
+    serve = jax.jit(step_lib.make_serve_step(cfg, api))
+    nxt_ref, _, _ = serve(params, consts, first, cache,
+                          jnp.int32(toks.shape[1]))
+    nxt_paged, _, _ = serve(params, consts, first, pcache,
+                            jnp.asarray([toks.shape[1]], jnp.int32),
+                            bt.as_array())
+    assert int(nxt_ref[0, 0]) == int(nxt_paged[0, 0])
+
+
+# ---------------------------------------------------------------------------
+# Engine: paged vs legacy, staggered arrivals
+# ---------------------------------------------------------------------------
+
+PROMPTS = [[5, 9, 11], [7, 3, 2, 8, 6], [4, 4, 13], [9, 2]]
+
+
+def _single_run(model, prompt, n_new, paged):
+    cfg, api, params, consts = model
+    eng = ServeEngine(cfg, params, consts, n_slots=2, max_len=32, paged=paged)
+    r = eng.submit(prompt, max_new_tokens=n_new)
+    eng.run_until_drained()
+    return r.out
+
+
+def test_paged_single_request_matches_legacy(model):
+    for p in PROMPTS:
+        assert _single_run(model, p, 5, True) == \
+            _single_run(model, p, 5, False), p
+
+
+def test_staggered_arrivals_match_single_runs(model):
+    """Requests of different prompt lengths submitted across multiple
+    step() calls must each decode exactly as if served alone — the
+    regression test for the legacy shared-max(pos) K/V write offset (a
+    lagging slot's K/V scattered at another slot's position)."""
+    cfg, api, params, consts = model
+    singles = [_single_run(model, p, 6, True) for p in PROMPTS]
+    eng = ServeEngine(cfg, params, consts, n_slots=2, max_len=32, paged=True)
+    reqs = [eng.submit(PROMPTS[0], max_new_tokens=6)]
+    for p in PROMPTS[1:]:
+        eng.step()                      # positions diverge between arrivals
+        reqs.append(eng.submit(p, max_new_tokens=6))
+    stats = eng.run_until_drained()
+    assert [r.out for r in reqs] == singles
+    assert all(r.done for r in reqs)
+    assert {r.uid for r in stats["completed"]} == {r.uid for r in reqs}
+    assert not stats["exhausted"]
+
+
+def test_run_until_drained_returns_completed(model):
+    cfg, api, params, consts = model
+    eng = ServeEngine(cfg, params, consts, n_slots=2, max_len=32, paged=True)
+    reqs = [eng.submit(p, max_new_tokens=3) for p in PROMPTS]
+    stats = eng.run_until_drained()
+    assert sorted(r.uid for r in stats["completed"]) == \
+        sorted(r.uid for r in reqs)
+    assert all(len(r.out) == 3 for r in stats["completed"])
+    assert stats["exhausted"] is False
+    assert stats["decode_steps"] == eng._steps
+
+
+def test_run_until_drained_reports_exhaustion(model):
+    cfg, api, params, consts = model
+    eng = ServeEngine(cfg, params, consts, n_slots=1, max_len=32, paged=True)
+    eng.submit([5, 9], max_new_tokens=20)
+    eng.submit([7, 3], max_new_tokens=20)
+    with pytest.warns(UserWarning, match="max_steps"):
+        stats = eng.run_until_drained(max_steps=2)
+    assert stats["exhausted"] is True
+    assert len(stats["completed"]) == 0
+
+
+def test_paged_prefill_dispatch_count(model):
+    """Batched prefill: one jit dispatch per admission batch, not one per
+    prompt token (legacy: sum of prompt lengths)."""
+    cfg, api, params, consts = model
+    outs = {}
+    for paged in (False, True):
+        eng = ServeEngine(cfg, params, consts, n_slots=4, max_len=32,
+                          paged=paged)
+        for p in PROMPTS:
+            eng.submit(p, max_new_tokens=4)
+        eng.run_until_drained()
+        outs[paged] = dict(eng.dispatches)
+    assert outs[False]["prefill"] == sum(len(p) for p in PROMPTS)
+    assert outs[True]["prefill"] == 1      # all 4 fit the 4 slots → 1 batch
+
+
+def test_paged_engine_frees_blocks(model):
+    cfg, api, params, consts = model
+    eng = ServeEngine(cfg, params, consts, n_slots=2, max_len=32, paged=True,
+                      block_len=8)
+    for p in PROMPTS:
+        eng.submit(p, max_new_tokens=4)
+    eng.run_until_drained()
+    assert eng.sched.blocks.blocks_in_use == 0
+
+
+def test_paged_engine_backpressure_tiny_pool(model):
+    """An undersized pool serializes requests instead of crashing."""
+    cfg, api, params, consts = model
+    eng = ServeEngine(cfg, params, consts, n_slots=2, max_len=32, paged=True,
+                      block_len=8, n_blocks=3)     # 2 usable blocks
+    reqs = [eng.submit(p, max_new_tokens=4) for p in PROMPTS[:3]]
+    stats = eng.run_until_drained()
+    assert all(r.done for r in reqs)
+    assert [r.out for r in reqs] == \
+        [_single_run(model, p, 4, True) for p in PROMPTS[:3]]
+    assert not stats["exhausted"]
+
+
+def test_submit_rejects_bad_prompts_without_wedging(model):
+    """Oversized/empty prompts fail at submit(), not from inside step(),
+    so a bad request can never strand the queue behind it."""
+    cfg, api, params, consts = model
+    eng = ServeEngine(cfg, params, consts, n_slots=2, max_len=16, paged=True)
+    ok = eng.submit(PROMPTS[0], max_new_tokens=3)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(list(range(3, 20)), max_new_tokens=3)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit([], max_new_tokens=3)
+    stats = eng.run_until_drained()
+    assert ok.done and len(ok.out) == 3
+    assert not stats["exhausted"]
+
+
+def test_submit_rejects_prompt_the_pool_cannot_hold(model):
+    """A prompt that fits max_len but not the whole block pool would sit
+    at the FIFO head forever and starve everything behind it — reject it
+    at submit()."""
+    cfg, api, params, consts = model
+    eng = ServeEngine(cfg, params, consts, n_slots=1, max_len=32, paged=True,
+                      block_len=8, n_blocks=3)      # 2 usable = 16 tokens
+    with pytest.raises(ValueError, match="n_blocks"):
+        eng.submit([5] * 20, max_new_tokens=3)
+    ok = eng.submit([5] * 10, max_new_tokens=3)     # queued later, unaffected
+    stats = eng.run_until_drained()
+    assert ok.done and len(ok.out) == 3
+    assert not stats["exhausted"]
+
+
+def test_all_parked_pool_preempts_and_recovers(model):
+    """When every active slot is parked for blocks, the engine preempts
+    the youngest request (recompute on readmission) instead of spinning —
+    outputs still match single-request runs."""
+    cfg, api, params, consts = model
+    long_prompts = [[3 + i] * 15 for i in range(2)]
+    singles = [_single_run(model, p, 12, True) for p in long_prompts]
+    # 7 usable blocks of 8: both 15-token prompts admit (2 blocks each)
+    # but cannot both grow to 15 + 12 tokens (4 blocks each)
+    eng = ServeEngine(cfg, params, consts, n_slots=2, max_len=32, paged=True,
+                      block_len=8, n_blocks=8)
+    reqs = [eng.submit(p, max_new_tokens=12) for p in long_prompts]
+    stats = eng.run_until_drained()
+    assert all(r.done for r in reqs)
+    assert [r.out for r in reqs] == singles
+    assert not stats["exhausted"]
+    assert eng.sched.blocks.blocks_in_use == 0
+
+
+def test_lone_request_pool_too_small_raises(model):
+    """A pool that cannot hold even one request's working set fails loudly
+    instead of livelocking."""
+    cfg, api, params, consts = model
+    eng = ServeEngine(cfg, params, consts, n_slots=1, max_len=32, paged=True,
+                      block_len=8, n_blocks=3)      # 2 usable blocks
+    eng.submit([5] * 15, max_new_tokens=10)         # needs 3 blocks by t=17
+    with pytest.raises(RuntimeError, match="n_blocks"):
+        eng.run_until_drained()
+
+
+def test_prefill_bucket_capped_at_view_len(model):
+    """A prompt whose power-of-two bucket exceeds view_len must not pad
+    past the block-table width (max_len=48 → view 48, prompt 33 → bucket
+    64 uncapped): outputs match a plain single-request run."""
+    cfg, api, params, consts = model
+    prompt = [3 + (i % 40) for i in range(33)]
+    outs = {}
+    for paged in (False, True):
+        eng = ServeEngine(cfg, params, consts, n_slots=2, max_len=48,
+                          paged=paged, block_len=16)
+        r = eng.submit(prompt, max_new_tokens=6)
+        eng.run_until_drained()
+        outs[paged] = r.out
+    assert outs[True] == outs[False]
+
+
+def test_paged_sparse_decode_matches_dense(model):
+    """exec_mode=sparse on the paged path emits identical tokens."""
+    cfg, api, params, consts = model
+    outs = []
+    for sparse in (False, True):
+        eng = ServeEngine(cfg, params, consts, n_slots=2, max_len=32,
+                          paged=True, sparse_decode=sparse)
+        reqs = [eng.submit(p, max_new_tokens=5) for p in PROMPTS[:2]]
+        eng.run_until_drained()
+        outs.append([r.out for r in reqs])
+    assert outs[0] == outs[1]
