@@ -37,6 +37,7 @@ def main(argv=None):
     all_benches = {
         "table2_memory": tables.table2_memory,
         "kernels": kernel_bench.kernel_rows,
+        "train_step_fused": kernel_bench.train_step_rows,
         "table1_support": tables.table1_support,
         "table2_ppl": tables.table2_ppl,
         "table3_throughput": tables.table3_throughput,
@@ -44,8 +45,8 @@ def main(argv=None):
         "table6_ablation": tables.table6_ablation,
         "fig4_support_seeds": tables.fig4_support_seeds,
     }
-    quick = {"table2_memory", "kernels", "table3_throughput",
-             "table5_inference"}
+    quick = {"table2_memory", "kernels", "train_step_fused",
+             "table3_throughput", "table5_inference"}
 
     selected = list(all_benches)
     if args.only:

@@ -7,6 +7,15 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if ! python -c "import hypothesis" 2>/dev/null; then
+  # try to heal the env first: when network allows, real hypothesis
+  # replaces the propshim and the property tests get shrinking + fresh
+  # examples. Offline (the common container case) this fails quietly and
+  # the fallback notice below stands.
+  pip install -q -r requirements-dev.txt 2>/dev/null || true
+fi
+if python -c "import hypothesis" 2>/dev/null; then
+  echo "hypothesis available — property tests run with full shrinking"
+else
   echo "!! NOTICE: hypothesis is not installed — property tests will run"
   echo "!! on the seeded-loop fallback in tests/_propshim.py (no shrinking,"
   echo "!! fixed examples). Install requirements-dev.txt for full coverage."
@@ -20,6 +29,11 @@ python scripts/smoke_core.py
 
 echo "== dry-run: llama_60m x train_4k on the 256-chip host mesh =="
 python -m repro.launch.dryrun --arch llama_60m --cell train_4k
+
+echo "== fused smoke: exec_mode=fused 3-step train on the Pallas path =="
+python -m repro.launch.train --arch llama_60m --smoke --mode sltrain \
+  --exec-mode fused --steps 3 --batch 2 --seq 16 --log-every 1 \
+  --ckpt-dir "$(mktemp -d)"
 
 echo "== serve smoke: paged KV engine, 3 staggered requests =="
 python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8 \

@@ -18,6 +18,15 @@ print("fwd max err:", float(jnp.abs(y - y_ref).max()))
 y_sp = sltrain.sl_matmul(x, params, consts, scale, exec_mode="sparse")
 print("sparse-mode max err:", float(jnp.abs(y_sp - y_ref).max()))
 
+# fused mode: same trainable params, extra tile consts from init
+params_f, consts_f = sltrain.init_params(key, d_in, d_out, r, delta,
+                                         dtype=jnp.float32, seed=3,
+                                         exec_mode="fused")
+params_f = jax.tree.map(lambda t: jax.random.normal(jax.random.PRNGKey(7), t.shape, t.dtype) * 0.1, params_f)
+y_fu = sltrain.sl_matmul(x, params_f, consts_f, scale, exec_mode="fused")
+print("fused-mode max err:", float(jnp.abs(y_fu - y_ref).max()))
+assert float(jnp.abs(y_fu - y_ref).max()) < 1e-4
+
 
 def loss_custom(p, x):
     return jnp.sum(jnp.sin(sltrain.sl_matmul(x, p, consts, scale)))

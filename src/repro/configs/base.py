@@ -33,15 +33,27 @@ class ParamConfig:
     # "row_balanced" gives each row exactly round(delta*d_out) entries (better
     # tile balance + Prop.1 coverage); "iid" matches the paper's sampling.
     support_kind: str = "row_balanced"
-    # Execution mode for the sparse factor: "dense" densifies (training);
-    # "sparse" uses the factored gather path (decode; beyond-paper, DESIGN §3).
+    # Execution mode matrix for the sltrain factors (DESIGN §3). Trainable
+    # params are identical across modes; only execution (and, for "fused",
+    # extra int32 index consts) differs:
+    #   "dense"  — densify W on the fly, one MXU matmul; the XLA baseline
+    #              for training. W is a transient, never a residual.
+    #   "sparse" — factored gather path: reads only (d+p)r + nnz parameter
+    #              bytes; the decode/serve path (compression ratio becomes
+    #              decode bandwidth).
+    #   "fused"  — Pallas custom-VJP path for training: sl_matmul densifies
+    #              per 128×128 tile in VMEM (forward + dx), sddmm gathers
+    #              dV without the G transient; dense W never touches HBM.
+    #              Init emits tile consts (core/sltrain.py).
     exec_mode: str = "dense"
     # ReLoRA restart period (steps), used only in mode == "relora".
     relora_period: int = 2000
 
-    @property
-    def scale(self) -> float:
-        return self.alpha / float(self.rank)
+    # NOTE: there is deliberately no global ``scale`` here. The effective
+    # rank is per matrix — Builder.linear caps it at min(d_in, d_out)//2
+    # (MoE expert/gate matrices are much smaller than attention ones) — so
+    # the LoRA scale is alpha / B.shape[-1] at the use site; a global
+    # alpha/rank silently disagrees wherever the cap binds.
 
 
 # ---------------------------------------------------------------------------

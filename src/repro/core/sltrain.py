@@ -9,12 +9,21 @@ Two support layouts:
   makes ∇V a single take_along_axis gather. TPU adaptation, DESIGN §3.
 * ``iid`` — the paper's uniform sampling, flat COO (rows, cols, v).
 
-Two execution modes (DESIGN §3):
+Three execution modes (DESIGN §3; the full matrix lives in
+``configs.base.ParamConfig``):
 
 * ``dense``  — densify-on-the-fly then one MXU matmul; custom VJP implements
   the paper's eq. (2): dense W is recomputed, never stored as a residual.
 * ``sparse`` — beyond-paper factored path for decode: reads only the
   factored bytes from HBM (the decode memory-roofline win).
+* ``fused``  — Pallas path for training: sl_matmul densifies each 128×128
+  tile in VMEM and feeds it straight to the MXU (forward + dx), sddmm
+  gathers dV without the G transient (backward) — the dense W never
+  touches HBM at all. Requires tile consts from init
+  (``init_params(..., exec_mode="fused")``): int32 {rows_t, cols_t, perm}
+  with a DETERMINISTIC per-tile capacity (``support.tile_cap``) so the
+  no-alloc dry-run twin and per-layer stacking agree; the trainable ``v``
+  stays flat and is gathered/scattered through ``perm`` inside the jit.
 """
 from __future__ import annotations
 
@@ -32,15 +41,58 @@ from repro.core import support as support_lib
 # Init
 # ---------------------------------------------------------------------------
 
+# Seed stride for the host-side re-sample fallback when a sampled support
+# exceeds the deterministic tile_cap bound (astronomically rare; see
+# support.tile_cap). Deterministic so elastic restore re-derives the same
+# final support.
+_RESAMPLE_STRIDE = 0x9E3779B1
+_RESAMPLE_ATTEMPTS = 16
+
+
+def prepare_fused_consts(rows, cols, d_in: int, d_out: int, delta: float,
+                         support_kind: str, seed: int):
+    """Tile consts {rows_t, cols_t, perm} for ``exec_mode="fused"`` at the
+    deterministic ``support.tile_cap`` capacity. Returns
+    (rows, cols, consts): if the sampled support busts the bound the
+    support is re-sampled on host with a deterministically bumped seed and
+    the (possibly new) COO arrays are returned alongside the consts."""
+    from repro.kernels import ops
+    cap = support_lib.tile_cap(d_in, d_out, delta, support_kind)
+    for attempt in range(_RESAMPLE_ATTEMPTS):
+        try:
+            tiles = ops.prepare_tile_consts(rows, cols, d_in, d_out, pad=cap)
+            return rows, cols, tiles
+        except ValueError:
+            rows, cols = support_lib.sample_support(
+                seed + (attempt + 1) * _RESAMPLE_STRIDE, d_in, d_out, delta,
+                support_kind)
+    raise ValueError(
+        f"fused tile capacity {cap} too small for ({d_in}, {d_out}, "
+        f"delta={delta}, {support_kind}) after {_RESAMPLE_ATTEMPTS} "
+        "re-samples — support.tile_cap bound is broken for this shape")
+
+
 def init_params(key, d_in: int, d_out: int, rank: int, delta: float,
                 dtype=jnp.bfloat16, support_kind: str = "row_balanced",
-                seed: int = 0):
+                seed: int = 0, exec_mode: str = "dense"):
     """Init (params, consts). LoRA-style init (paper §3.3): Kaiming-uniform
-    A, zero B, v ~ U[-1/sqrt(d_in), 1/sqrt(d_in)]."""
+    A, zero B, v ~ U[-1/sqrt(d_in), 1/sqrt(d_in)].
+
+    ``exec_mode="fused"`` additionally emits the int32 tile consts
+    {rows_t, cols_t, perm} the Pallas custom-VJP linear consumes, padded to
+    the deterministic ``support.tile_cap`` capacity (abstract dry-run and
+    per-layer stacking both rely on shape determinism). The trainable
+    params are IDENTICAL across exec modes — same sampled support, same
+    flat ``v`` — so checkpoints and optimizer state are layout-independent
+    and a dense-mode run with the same seed is token-for-token comparable."""
     k_a, k_v = jax.random.split(key)
     lim_a = float(np.sqrt(6.0 / d_in))
     lim_v = float(1.0 / np.sqrt(d_in))
     rows, cols = support_lib.sample_support(seed, d_in, d_out, delta, support_kind)
+    tiles = None
+    if exec_mode == "fused":
+        rows, cols, tiles = prepare_fused_consts(
+            rows, cols, d_in, d_out, delta, support_kind, seed)
     if support_kind == "row_balanced":
         k = cols.shape[0] // d_in
         v_shape = (d_in, k)
@@ -48,6 +100,8 @@ def init_params(key, d_in: int, d_out: int, rank: int, delta: float,
     else:
         v_shape = (cols.shape[0],)
         consts = {"rows": jnp.asarray(rows), "cols": jnp.asarray(cols)}
+    if tiles is not None:
+        consts.update(tiles)
     params = {
         "B": jnp.zeros((d_in, rank), dtype=dtype),
         "A": jax.random.uniform(k_a, (rank, d_out), dtype=jnp.float32,
@@ -59,8 +113,12 @@ def init_params(key, d_in: int, d_out: int, rank: int, delta: float,
 
 
 def abstract_params(d_in: int, d_out: int, rank: int, delta: float,
-                    dtype=jnp.bfloat16, support_kind: str = "row_balanced"):
-    """ShapeDtypeStruct twin of ``init_params`` for the no-alloc dry-run."""
+                    dtype=jnp.bfloat16, support_kind: str = "row_balanced",
+                    exec_mode: str = "dense"):
+    """ShapeDtypeStruct twin of ``init_params`` for the no-alloc dry-run.
+    With ``exec_mode="fused"`` the tile-const shapes are exact (not a
+    bound-by-coincidence): concrete init pads every tile to the same
+    deterministic ``support.tile_cap`` capacity this computes."""
     nnz = support_lib.nnz_for(d_in, d_out, delta, support_kind)
     sds = jax.ShapeDtypeStruct
     params = {"B": sds((d_in, rank), dtype), "A": sds((rank, d_out), dtype)}
@@ -71,6 +129,13 @@ def abstract_params(d_in: int, d_out: int, rank: int, delta: float,
     else:
         params["v"] = sds((nnz,), dtype)
         consts = {"rows": sds((nnz,), jnp.int32), "cols": sds((nnz,), jnp.int32)}
+    if exec_mode == "fused":
+        tile = support_lib.TILE
+        nkt = (d_in + tile - 1) // tile
+        nnt = (d_out + tile - 1) // tile
+        cap = support_lib.tile_cap(d_in, d_out, delta, support_kind)
+        for name in ("rows_t", "cols_t", "perm"):
+            consts[name] = sds((nkt, nnt, cap), jnp.int32)
     return params, consts
 
 
@@ -112,8 +177,14 @@ def _sl_matmul_rb_fwd(x, B, A, v, cols, scale):
 
 
 def _grads_from_G_local(xf, dyf, A, B, v, cols, scale):
-    """(dB, dA, dv) from a device-local G transient (paper eq. 2)."""
-    G = (xf.T @ dyf).astype(jnp.float32)
+    """(dB, dA, dv) from a device-local G transient (paper eq. 2).
+
+    G accumulates in f32 (preferred_element_type, NOT a bf16 matmul whose
+    result is cast after — that rounds the whole token contraction through
+    bf16 first, the PR-1 sparse-decode bug class) so the densify path
+    agrees with the fused sddmm kernel, which accumulates its G tiles in
+    f32 the same way."""
+    G = jnp.matmul(xf.T, dyf, preferred_element_type=jnp.float32)
     dB = (scale * (G @ A.astype(jnp.float32).T)).astype(B.dtype)
     dA = (scale * (B.astype(jnp.float32).T @ G)).astype(A.dtype)
     dv = jnp.take_along_axis(G, cols.astype(jnp.int32), axis=1
@@ -240,7 +311,9 @@ def _sl_matmul_coo_bwd(scale, res, dy):
     d_out = dy.shape[-1]
     xf = x.reshape(-1, d_in)
     dyf = dy.reshape(-1, d_out)
-    G = (xf.T @ dyf).astype(jnp.float32)
+    # f32 accumulation via preferred_element_type (same contract as the
+    # row-balanced path's _grads_from_G_local)
+    G = jnp.matmul(xf.T, dyf, preferred_element_type=jnp.float32)
     dB = (scale * (G @ A.astype(jnp.float32).T)).astype(B.dtype)
     dA = (scale * (B.astype(jnp.float32).T @ G)).astype(A.dtype)
     dv = G[rows, cols].astype(v.dtype)
@@ -304,8 +377,19 @@ def _rb_rows(cols):
 
 
 def sl_matmul(x, params, consts, scale: float, exec_mode: str = "dense"):
-    """Apply one SLTrain linear. params={B,A,v}; consts={cols[,rows]}."""
+    """Apply one SLTrain linear. params={B,A,v};
+    consts={cols[,rows][,rows_t,cols_t,perm]}."""
     rb = "rows" not in consts
+    if exec_mode == "fused":
+        if "perm" not in consts:
+            raise ValueError(
+                "exec_mode='fused' needs tile consts {rows_t, cols_t, perm} "
+                "— init the layer with exec_mode='fused' "
+                "(core.sltrain.init_params / Builder.linear)")
+        from repro.kernels import ops
+        return ops.sl_linear(x, params["B"], params["A"], params["v"],
+                             consts["rows_t"], consts["cols_t"],
+                             consts["perm"], scale)
     if exec_mode == "sparse":
         rows = _rb_rows(consts["cols"]) if rb else consts["rows"]
         return _sl_matmul_sparse(x, params["B"], params["A"], params["v"],

@@ -18,9 +18,22 @@ seed, so elastic restore can re-derive identical supports on a new mesh.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
+
+# Kernel tile edge (the Pallas sl_matmul/sddmm 128×128 VMEM tiles). Single
+# source of truth for every tile-shape computation outside the kernels
+# themselves (tile_cap, ops.prepare_tiles, sltrain.abstract_params) — the
+# abstract dry-run twin only matches concrete init if all of them agree.
+TILE = 128
+
+# Above this many elements the row-balanced sampler stops materializing the
+# full (d_in, d_out) random-key matrix and draws it in row blocks instead
+# (same PRNG stream, so both branches produce identical supports — see
+# ``sample_support``). Module-level so tests can shrink it to exercise the
+# blocked branch on small shapes.
+DENSE_KEYS_ELEMS = 1 << 26
 
 
 def nnz_for(d_in: int, d_out: int, delta: float, kind: str = "row_balanced") -> int:
@@ -31,6 +44,60 @@ def nnz_for(d_in: int, d_out: int, delta: float, kind: str = "row_balanced") -> 
     return max(1, int(round(delta * d_in * d_out)))
 
 
+def tile_cap(d_in: int, d_out: int, delta: float,
+             kind: str = "row_balanced", tile_r: int = TILE,
+             tile_c: int = TILE) -> int:
+    """Deterministic per-tile capacity for the tile-CSR layout.
+
+    ``tile_layout``'s data-dependent pad (max realized count per tile)
+    breaks two consumers: the no-alloc dry-run cannot know it without
+    sampling, and ``stack_layers`` cannot stack per-layer tile consts whose
+    realized pads differ. This bound depends only on (shape, delta, kind):
+    mean entries per (tile_r × tile_c) tile plus an 8·sqrt(mean) + 16
+    sub-Gaussian tail margin (per-tile overflow odds ~exp(-30); the fused
+    init re-samples the support on the host in that astronomically rare
+    case), clamped to the per-tile combinatorial maximum and rounded up to
+    a multiple of 8 for TPU-friendly strides.
+    """
+    rows_in_tile = min(tile_r, d_in)
+    cols_in_tile = min(tile_c, d_out)
+    if kind == "row_balanced":
+        k = max(1, int(round(delta * d_out)))
+        mean = rows_in_tile * k * (cols_in_tile / d_out)
+        hard = rows_in_tile * min(k, cols_in_tile)
+    else:
+        nnz = nnz_for(d_in, d_out, delta, kind)
+        mean = nnz * (rows_in_tile * cols_in_tile) / (d_in * d_out)
+        hard = rows_in_tile * cols_in_tile
+    cap = int(np.ceil(mean + 8.0 * np.sqrt(mean) + 16.0))
+    cap = min(cap, int(hard))
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def _row_balanced_cols(rng: np.random.Generator, d_in: int, d_out: int,
+                       k: int) -> np.ndarray:
+    """Per-row k-subset sampling via argpartition of random keys.
+
+    Row blocks bound peak memory to O(block · d_out) instead of the full
+    d_in·d_out key matrix (the old fallback was an O(d_in) python loop of
+    ``rng.choice`` — minutes at 7B shapes). PCG64 fills C-order from a
+    sequential stream, so consecutive block draws reproduce the single
+    full-matrix draw bit-for-bit: both branches are seed-deterministic AND
+    agree with each other (regression-tested across the threshold).
+    """
+    block = d_in if d_in * d_out <= DENSE_KEYS_ELEMS else \
+        max(1, DENSE_KEYS_ELEMS // d_out)
+    out = np.empty((d_in, k), dtype=np.int32)
+    for i0 in range(0, d_in, block):
+        b = min(block, d_in - i0)
+        keys = rng.random((b, d_out), dtype=np.float32)
+        if k >= d_out:          # degenerate: every column is in the support
+            out[i0:i0 + b] = np.arange(d_out, dtype=np.int32)
+        else:
+            out[i0:i0 + b] = np.argpartition(keys, k, axis=1)[:, :k]
+    return out
+
+
 def sample_support(
     seed: int, d_in: int, d_out: int, delta: float, kind: str = "row_balanced"
 ) -> Tuple[np.ndarray, np.ndarray]:
@@ -38,15 +105,9 @@ def sample_support(
     rng = np.random.default_rng(np.uint64(seed))
     if kind == "row_balanced":
         k = max(1, int(round(delta * d_out)))
-        # per-row choice without replacement via partial argsort of random keys
-        cols = np.empty((d_in, k), dtype=np.int32)
-        # vectorized: random matrix argpartition per row
-        keys = rng.random((d_in, d_out), dtype=np.float32) if d_in * d_out <= (1 << 26) else None
-        if keys is not None:
-            cols = np.argpartition(keys, k, axis=1)[:, :k].astype(np.int32)
-        else:  # large matrices: per-row sampling loop in blocks (init-time only)
-            for i in range(d_in):
-                cols[i] = rng.choice(d_out, size=k, replace=False).astype(np.int32)
+        # per-row choice without replacement via partial argsort of random
+        # keys; blocked above DENSE_KEYS_ELEMS with an identical stream
+        cols = _row_balanced_cols(rng, d_in, d_out, k)
         cols.sort(axis=1)
         rows = np.repeat(np.arange(d_in, dtype=np.int32), k)
         return rows, cols.reshape(-1)
@@ -65,8 +126,9 @@ def tile_layout(
     cols: np.ndarray,
     d_in: int,
     d_out: int,
-    tile_r: int = 128,
-    tile_c: int = 128,
+    tile_r: int = TILE,
+    tile_c: int = TILE,
+    pad: Optional[int] = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
     """Bucket support entries by (row-tile, col-tile) for the Pallas kernels.
 
@@ -76,8 +138,12 @@ def tile_layout(
       * local_rc    int32[n_tiles * pad, 2] — (row, col) local to the tile;
                     padding slots point at (0, 0),
       * tile_counts int32[nt_r, nt_c] — real entries per tile,
-      * pad_per_tile — the uniform per-tile capacity (max count, rounded up to
-                    a multiple of 8 for TPU-friendly strides).
+      * pad_per_tile — the uniform per-tile capacity. By default the max
+                    realized count rounded up to a multiple of 8 (data-
+                    dependent); pass ``pad`` (e.g. from :func:`tile_cap`) to
+                    force a deterministic capacity — raises ``ValueError``
+                    when the realized max exceeds it so callers can
+                    re-sample the support on host.
     """
     nt_r = (d_in + tile_r - 1) // tile_r
     nt_c = (d_out + tile_c - 1) // tile_c
@@ -85,8 +151,13 @@ def tile_layout(
     order = np.argsort(t_id, kind="stable")
     t_sorted = t_id[order]
     counts = np.bincount(t_sorted, minlength=nt_r * nt_c).astype(np.int32)
-    pad = int(counts.max()) if counts.size else 0
-    pad = max(8, ((pad + 7) // 8) * 8)
+    max_count = int(counts.max()) if counts.size else 0
+    if pad is None:
+        pad = max(8, ((max_count + 7) // 8) * 8)
+    elif max_count > pad:
+        raise ValueError(
+            f"tile_layout: realized per-tile max {max_count} exceeds the "
+            f"requested capacity {pad} — re-sample the support")
     n_tiles = nt_r * nt_c
     perm = np.full((n_tiles, pad), -1, dtype=np.int32)
     local = np.zeros((n_tiles, pad, 2), dtype=np.int32)

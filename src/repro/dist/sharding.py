@@ -23,6 +23,9 @@ Placement policy (tensor-parallel output sharding + expert parallelism):
 * support ``v`` / ``cols`` (row-balanced ``(d_in, k)``) — shard ``d_in``
   over model: the gather in densify is row-local, so the support shards
   with zero cross-device index traffic;
+* fused-mode tile consts ``rows_t`` / ``cols_t`` / ``perm``
+  ``(nkt, nnt, cap)`` int32 — replicated (small index metadata; keeps the
+  Pallas tile addressing mesh-agnostic);
 * expert-stacked MoE weights — shard the expert dim over model (EP);
 * norms / embeds / biases / routers — replicated.
 
@@ -175,11 +178,19 @@ def _base_spec(name: str, keys: Tuple[str, ...], trailing: Tuple[int, ...],
             return (_guard(trailing[0], mesh,    # shard d_in rows
                            model_axis),) + (None,) * (nd - 1)
         return (None,) * nd                      # iid COO (nnz,): replicate
+    # everything else — including the fused-mode tile consts rows_t /
+    # cols_t / perm (nkt, nnt, cap) int32 — is replicated: they are index
+    # metadata a few % the size of v, and replication keeps the Pallas
+    # tile addressing mesh-agnostic (their 3-D base rank comes from
+    # _MATRIX_NDIM so layer stacking is still recognized).
     return (None,) * nd
 
 
 _MATRIX_NDIM = {"w": 2, "B": 2, "A": 2, "cols": 2, "v": 2, "W0": 2,
-                "embed": 2, "lm_head": 2}
+                "embed": 2, "lm_head": 2,
+                # fused tile consts are 3-D (nkt, nnt, cap); anything
+                # beyond that is layer/expert stacking
+                "rows_t": 3, "cols_t": 3, "perm": 3}
 
 
 def spec_for_param(path, leaf, mesh, *, model_axis: str = MODEL_AXIS,

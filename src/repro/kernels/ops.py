@@ -26,25 +26,63 @@ INTERPRET = True  # flipped to False by the TPU launcher
 # Tile-CSR support preparation (init-time, host numpy)
 # ---------------------------------------------------------------------------
 
-def prepare_tiles(rows: np.ndarray, cols: np.ndarray, v: np.ndarray,
-                  d_in: int, d_out: int, tile_r: int = 128,
-                  tile_c: int = 128) -> Tuple[jnp.ndarray, jnp.ndarray,
-                                              jnp.ndarray]:
-    """COO support + values → (v_t, rows_t, cols_t) of shape
-    (K/tile_r, N/tile_c, E): the layout both kernels consume. Padding slots
-    carry v = 0 at local (0, 0). Dims are padded up to tile multiples."""
+def _tile_index_arrays(rows: np.ndarray, cols: np.ndarray, d_in: int,
+                       d_out: int, tile_r: int, tile_c: int,
+                       pad: int | None):
+    """Shared tile-CSR layout body: pad dims to tile multiples, bucket the
+    support, and shape the index arrays. Returns numpy
+    (rows_t, cols_t, perm), each (K/tile_r, N/tile_c, E) int32 — the ONE
+    place the tile geometry is computed, so value-baking (prepare_tiles)
+    and fused index consts (prepare_tile_consts) can never desync."""
     kp = ((d_in + tile_r - 1) // tile_r) * tile_r
     np_ = ((d_out + tile_c - 1) // tile_c) * tile_c
     perm, local, counts, pad = support_lib.tile_layout(
-        rows, cols, kp, np_, tile_r, tile_c)
+        rows, cols, kp, np_, tile_r, tile_c, pad=pad)
     nkt, nnt = kp // tile_r, np_ // tile_c
-    v_flat = np.asarray(v, dtype=np.float32).reshape(-1)
-    vt = np.where(perm >= 0, v_flat[np.maximum(perm, 0)], 0.0
-                  ).astype(np.float32).reshape(nkt, nnt, pad)
     rt = local[:, 0].reshape(nkt, nnt, pad).astype(np.int32)
     ct = local[:, 1].reshape(nkt, nnt, pad).astype(np.int32)
-    return jnp.asarray(vt), jnp.asarray(rt), jnp.asarray(ct), jnp.asarray(
-        perm.reshape(nkt, nnt, pad))
+    return rt, ct, perm.reshape(nkt, nnt, pad)
+
+
+def prepare_tiles(rows: np.ndarray, cols: np.ndarray, v: np.ndarray,
+                  d_in: int, d_out: int, tile_r: int = support_lib.TILE,
+                  tile_c: int = support_lib.TILE, pad: int | None = None,
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                             jnp.ndarray, jnp.ndarray]:
+    """COO support + values → 4-tuple (v_t, rows_t, cols_t, perm), each of
+    shape (K/tile_r, N/tile_c, E): the layout both kernels consume plus the
+    permutation back into COO order (perm == -1 on padding slots, which
+    carry v = 0 at local (0, 0)). Dims are padded up to tile multiples.
+    ``pad`` forces a deterministic per-tile capacity E (see
+    ``support.tile_cap``); by default E is the realized per-tile max."""
+    rt, ct, perm = _tile_index_arrays(rows, cols, d_in, d_out, tile_r,
+                                      tile_c, pad)
+    v_flat = np.asarray(v, dtype=np.float32).reshape(-1)
+    vt = np.where(perm >= 0, v_flat[np.maximum(perm, 0)], 0.0
+                  ).astype(np.float32)
+    return (jnp.asarray(vt), jnp.asarray(rt), jnp.asarray(ct),
+            jnp.asarray(perm))
+
+
+def prepare_tile_consts(rows: np.ndarray, cols: np.ndarray, d_in: int,
+                        d_out: int, *, pad: int,
+                        tile_r: int = support_lib.TILE,
+                        tile_c: int = support_lib.TILE) -> dict:
+    """Tile-CSR *index* consts for ``exec_mode="fused"`` training:
+    {rows_t, cols_t, perm}, each int32 (K/tile_r, N/tile_c, pad).
+
+    Unlike :func:`prepare_tiles` this bakes NO values: the trainable ``v``
+    stays flat in the param tree (optimizer state / checkpoints / the
+    sparse decode path stay layout-independent) and is gathered into tile
+    order through ``perm`` inside the jit'd forward (``sl_linear``). The
+    capacity ``pad`` must be the deterministic ``support.tile_cap`` bound
+    so abstract dry-run shapes match concrete init and per-layer consts
+    stack; raises ``ValueError`` when the sampled support exceeds it
+    (callers re-sample on host)."""
+    rt, ct, perm = _tile_index_arrays(rows, cols, d_in, d_out, tile_r,
+                                      tile_c, pad)
+    return {"rows_t": jnp.asarray(rt), "cols_t": jnp.asarray(ct),
+            "perm": jnp.asarray(perm)}
 
 
 def _pad2(x, mult_r, mult_c):
@@ -77,12 +115,19 @@ def sl_matmul(x, B, A, v_t, rows_t, cols_t, scale: float, *,
 
 def sddmm(x, dy, rows_t, cols_t, *, bm: int = 128,
           interpret: bool | None = None):
-    """dv tiles for support (rows_t, cols_t); x (..., K), dy (..., N)."""
+    """dv tiles for support (rows_t, cols_t); x (..., K), dy (..., N).
+
+    Output is f32: the kernel forms each G tile with
+    ``preferred_element_type=f32`` and accumulates over the token grid in
+    an f32 output block, so bf16 inputs never round dv through bf16 (same
+    accumulation contract as the sparse-decode fix). Upstream often hands
+    f32 cotangents against bf16 activations — align dy to x's dtype here
+    (the MXU dot needs matching operand dtypes; accumulation stays f32)."""
     interp = INTERPRET if interpret is None else interpret
     k = x.shape[-1]
     n = dy.shape[-1]
     xf = _pad2(x.reshape(-1, k), bm, 128)
-    dyf = _pad2(dy.reshape(-1, n), bm, 128)
+    dyf = _pad2(dy.reshape(-1, n).astype(x.dtype), bm, 128)
     return sddmm_kernel.sddmm(xf, dyf, rows_t, cols_t, bm=bm,
                               interpret=interp)
 
@@ -90,6 +135,42 @@ def sddmm(x, dy, rows_t, cols_t, *, bm: int = 128,
 # ---------------------------------------------------------------------------
 # Fused SLTrain linear: pallas forward + pallas backward, custom VJP
 # ---------------------------------------------------------------------------
+
+def _fused_grads(x, B, A, v_t, rows_t, cols_t, scale, dy):
+    """Shared backward math of the fused linear: (dx, dB, dA, dv_t f32).
+
+    Factored grads via the (token-dim contracted) products — same algebra
+    as core.sltrain; the d_in×d_out transient only ever exists per-tile
+    inside the sddmm kernel. All chains accumulate in f32 (an xf@B whose
+    RESULT is cast to f32 rounds the token contraction through bf16 first
+    — the PR-1 sparse-decode bug class); dv_t stays the sddmm kernel's
+    f32 accumulator output."""
+    k = x.shape[-1]
+    n = dy.shape[-1]
+    # backward activations in the model dtype (§Perf it.9), like the
+    # densify path — also what lets the MXU dots pair matching dtypes
+    dy = dy.astype(x.dtype)
+    xf = x.reshape(-1, k)
+    dyf = dy.reshape(-1, n)
+    # bf16 operands with f32 accumulation (preferred_element_type) — the
+    # products are exact in f32, so this equals an upcast matmul at native
+    # MXU speed; the second-level dots carry the f32 intermediate
+    f32 = jnp.float32
+    xB = jnp.matmul(xf, B, preferred_element_type=f32)    # (M, r) f32
+    dA = (scale * jnp.matmul(xB.T, dyf.astype(f32))).astype(A.dtype)
+    dyA = jnp.matmul(dyf, A.T, preferred_element_type=f32)  # (M, r) f32
+    dB = (scale * jnp.matmul(xf.astype(f32).T, dyA)).astype(B.dtype)
+    dv_t = sddmm(xf, dyf, rows_t, cols_t)                 # f32 tiles
+    # dx = dy @ W^T: reuse the fused kernel on the transposed factors. The
+    # support transpose is (cols_t, rows_t) tiles transposed in the grid —
+    # equivalently run sl_matmul with swapped tile axes.
+    vt_T = jnp.swapaxes(v_t, 0, 1)
+    rt_T = jnp.swapaxes(cols_t, 0, 1)
+    ct_T = jnp.swapaxes(rows_t, 0, 1)
+    dx = sl_matmul(dyf, A.T, B.T, vt_T, rt_T, ct_T, scale
+                   ).reshape(x.shape).astype(x.dtype)
+    return dx, dB, dA, dv_t
+
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
 def sl_linear_fused(x, B, A, v_t, rows_t, cols_t, scale):
@@ -103,30 +184,59 @@ def _fused_fwd(x, B, A, v_t, rows_t, cols_t, scale):
 
 def _fused_bwd(scale, res, dy):
     x, B, A, v_t, rows_t, cols_t = res
-    k = x.shape[-1]
-    n = dy.shape[-1]
-    xf = x.reshape(-1, k)
-    dyf = dy.reshape(-1, n)
-    # factored grads via the (token-dim contracted) products — same algebra
-    # as core.sltrain, the d_in×d_out transient only ever exists per-tile
-    # inside the sddmm kernel.
-    xB = (xf @ B).astype(jnp.float32)                     # (M, r)
-    dA = (scale * (xB.T @ dyf.astype(jnp.float32))).astype(A.dtype)
-    dyA = (dyf @ A.T).astype(jnp.float32)                 # (M, r)
-    dB = (scale * (xf.astype(jnp.float32).T @ dyA)).astype(B.dtype)
-    dv_t = sddmm(xf, dyf, rows_t, cols_t).astype(v_t.dtype)
-    # dx = dy @ W^T: reuse the fused kernel on the transposed factors. The
-    # support transpose is (cols_t, rows_t) tiles transposed in the grid —
-    # equivalently run sl_matmul with swapped tile axes.
-    vt_T = jnp.swapaxes(v_t, 0, 1)
-    rt_T = jnp.swapaxes(cols_t, 0, 1)
-    ct_T = jnp.swapaxes(rows_t, 0, 1)
-    dx = sl_matmul(dyf, A.T, B.T, vt_T, rt_T, ct_T, scale
-                   ).reshape(x.shape).astype(x.dtype)
-    return dx, dB, dA, dv_t, None, None
+    dx, dB, dA, dv_t = _fused_grads(x, B, A, v_t, rows_t, cols_t, scale, dy)
+    return dx, dB, dA, dv_t.astype(v_t.dtype), None, None
 
 
 sl_linear_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Flat-v fused linear (exec_mode="fused" training path)
+# ---------------------------------------------------------------------------
+
+def _gather_tiles(v, perm):
+    """Flat trainable v → f32 tile values through the layout permutation.
+    Padding slots (perm == -1) contribute exactly 0 through the kernel."""
+    vf = v.reshape(-1).astype(jnp.float32)
+    safe = jnp.clip(perm, 0, vf.shape[0] - 1)
+    return jnp.where(perm >= 0, vf[safe], 0.0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7,))
+def sl_linear(x, B, A, v, rows_t, cols_t, perm, scale):
+    """y = x @ (scale·B·A ⊕ V) with the trainable ``v`` in its FLAT layout
+    (row-balanced (d_in, k) or COO (nnz,)) — the param-tree leaf the
+    optimizer/checkpoints see. The tile gather (fwd) and scatter (bwd)
+    happen inside the jit, so only the layout-independent flat v is ever
+    state; tile order is a pure function of the int consts from
+    ``prepare_tile_consts``."""
+    return sl_matmul(x, B, A, _gather_tiles(v, perm), rows_t, cols_t, scale)
+
+
+def _sl_linear_fwd(x, B, A, v, rows_t, cols_t, perm, scale):
+    v_t = _gather_tiles(v, perm)
+    y = sl_matmul(x, B, A, v_t, rows_t, cols_t, scale)
+    # residuals stay factored-sized (Alg. 1): v_t is nnz+pad floats, never
+    # the (d_in, d_out) dense W
+    return y, (x, B, A, v, v_t, rows_t, cols_t, perm)
+
+
+def _sl_linear_bwd(scale, res, dy):
+    x, B, A, v, v_t, rows_t, cols_t, perm = res
+    dx, dB, dA, dv_t = _fused_grads(x, B, A, v_t, rows_t, cols_t, scale, dy)
+    # scatter the f32 tile grads back through perm onto the flat layout;
+    # every valid perm entry appears exactly once (tile_layout invariant)
+    # so the add is exact, padding rides the clipped index with a 0 value
+    pf = perm.reshape(-1)
+    flat = jnp.where(pf >= 0, dv_t.reshape(-1), 0.0)
+    dv = jnp.zeros((v.size,), jnp.float32).at[
+        jnp.clip(pf, 0, v.size - 1)].add(flat)
+    return (dx, dB, dA, dv.reshape(v.shape).astype(v.dtype),
+            None, None, None)
+
+
+sl_linear.defvjp(_sl_linear_fwd, _sl_linear_bwd)
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,9 @@ def build_train_config(args) -> TrainConfig:
     if args.mode:
         cfg = dataclasses.replace(
             cfg, param=dataclasses.replace(cfg.param, mode=args.mode))
+    if args.exec_mode:
+        cfg = dataclasses.replace(
+            cfg, param=dataclasses.replace(cfg.param, exec_mode=args.exec_mode))
     if args.delta is not None:
         cfg = dataclasses.replace(
             cfg, param=dataclasses.replace(cfg.param, delta=args.delta))
@@ -51,6 +54,11 @@ def main(argv=None):
                     help="use the reduced config (CPU-friendly)")
     ap.add_argument("--mode", default=None,
                     choices=[None, "dense", "lowrank", "sltrain", "relora"])
+    ap.add_argument("--exec-mode", default=None,
+                    choices=[None, "dense", "sparse", "fused"],
+                    help="sltrain execution mode: dense densify (XLA "
+                         "baseline), sparse factored gather (decode), "
+                         "fused Pallas tile kernels (training)")
     ap.add_argument("--optimizer", default="adamw",
                     choices=["adamw", "adam8bit", "galore_adamw"])
     ap.add_argument("--delta", type=float, default=None)

@@ -86,13 +86,18 @@ class Builder:
             else:
                 params = relora.abstract_params(d_in, d_out, r, b.dtype)
         elif pc.mode == "sltrain":
+            # exec_mode="fused" adds the tile-CSR index consts; their
+            # shapes are deterministic (support.tile_cap), so the abstract
+            # twin matches and stack_layers can stack them across layers
             if b.concrete:
                 params, consts = sltrain.init_params(
                     b.key, d_in, d_out, r, pc.delta, b.dtype,
-                    pc.support_kind, seed=self.seed ^ _name_hash(b.path))
+                    pc.support_kind, seed=self.seed ^ _name_hash(b.path),
+                    exec_mode=pc.exec_mode)
             else:
                 params, consts = sltrain.abstract_params(
-                    d_in, d_out, r, pc.delta, b.dtype, pc.support_kind)
+                    d_in, d_out, r, pc.delta, b.dtype, pc.support_kind,
+                    exec_mode=pc.exec_mode)
         else:
             raise ValueError(pc.mode)
         if bias:

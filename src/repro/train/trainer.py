@@ -36,8 +36,14 @@ from repro.train import step as step_lib
 def _make_relora_merge(cfg):
     """ReLoRA restart (paper eq. (1) / baseline [32]): at each period end,
     merge BA into W0, re-init the factors, and ZERO the factors' Adam
-    moments (the optimizer-state reset the paper's schedule requires)."""
-    scale = cfg.param.scale
+    moments (the optimizer-state reset the paper's schedule requires).
+
+    The merge scale is alpha / r_eff PER MATRIX (r_eff = B.shape[-1], the
+    rank Builder.linear actually allocated after the min(d_in, d_out)//2
+    cap) — the same convention apply_linear uses in the forward. A global
+    alpha/rank here would merge small (capped) matrices at the wrong
+    magnitude."""
+    alpha = cfg.param.alpha
 
     def merge(params, opt_state, key):
         is_relora = lambda t: isinstance(t, dict) and \
@@ -48,7 +54,7 @@ def _make_relora_merge(cfg):
         def walk(t, k):
             if is_relora(t):
                 k, sub = jax.random.split(k)
-                merged = relora_lib.merge(t, sub, scale)
+                merged = relora_lib.merge(t, sub, alpha / t["B"].shape[-1])
                 leaves_done.append(True)
                 return merged, k
             if isinstance(t, dict):

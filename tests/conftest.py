@@ -5,5 +5,7 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+# repo root, so tests can import the benchmarks/ modules they exercise
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), os.pardir))
 
 import repro.dist  # noqa: E402,F401  (import side effect: compat shims)

@@ -195,6 +195,63 @@ def test_tile_layout_is_permutation(seed, d_in, d_out):
         assert (cols[p[m]] == loc[m, 1] + tc * 128).all()
 
 
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500), d_in=st.integers(64, 300),
+       d_out=st.integers(64, 300), delta=st.floats(0.02, 0.08),
+       kind=st.sampled_from(["row_balanced", "iid"]))
+def test_tile_layout_roundtrips_through_prepare_tiles(seed, d_in, d_out,
+                                                      delta, kind):
+    """tile_layout round-trip invariants at the deterministic tile_cap
+    capacity: every support entry appears exactly once across tiles,
+    padding slots carry perm == -1 and contribute exactly zero through
+    prepare_tiles (their baked v is 0)."""
+    from repro.kernels import ops
+    rows, cols = support.sample_support(seed, d_in, d_out, delta, kind)
+    nnz = rows.shape[0]
+    rng = np.random.default_rng(seed)
+    # strictly nonzero values so a zero in v_t can only mean padding
+    v = (rng.random(nnz) + 0.5).astype(np.float32)
+    cap = support.tile_cap(d_in, d_out, delta, kind)
+    v_t, r_t, c_t, perm = ops.prepare_tiles(rows, cols, v, d_in, d_out,
+                                            pad=cap)
+    assert v_t.shape == r_t.shape == c_t.shape == perm.shape
+    assert v_t.shape[-1] == cap
+    p = np.asarray(perm).reshape(-1)
+    valid = p[p >= 0]
+    # every entry exactly once, indices within the COO arrays
+    assert valid.size == nnz
+    assert len(np.unique(valid)) == nnz
+    assert valid.min() >= 0 and valid.max() < nnz
+    # round trip: tile values map back to the original v
+    vt_flat = np.asarray(v_t).reshape(-1)
+    np.testing.assert_array_equal(vt_flat[p >= 0][np.argsort(valid)],
+                                  v[np.sort(valid)])
+    # padding slots contribute zero (and sit at harmless local (0, 0))
+    assert (vt_flat[p < 0] == 0.0).all()
+    loc = np.stack([np.asarray(r_t).reshape(-1),
+                    np.asarray(c_t).reshape(-1)], axis=1)
+    assert (loc[p < 0] == 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000),
+       kind=st.sampled_from(["row_balanced", "iid"]))
+def test_fused_exec_mode_matches_dense(seed, kind):
+    """exec_mode='fused' (Pallas tile kernels through the flat-v gather)
+    must agree with the densify path for both support layouts."""
+    d_in, d_out, r = 72, 150, 8
+    params, consts = sltrain.init_params(
+        jax.random.PRNGKey(seed), d_in, d_out, r, 0.05, jnp.float32, kind,
+        seed=seed, exec_mode="fused")
+    params["B"] = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                    params["B"].shape) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(seed + 2), (2, 5, d_in))
+    y_d = sltrain.sl_matmul(x, params, consts, 0.5, exec_mode="dense")
+    y_f = sltrain.sl_matmul(x, params, consts, 0.5, exec_mode="fused")
+    np.testing.assert_allclose(np.asarray(y_f), np.asarray(y_d), atol=1e-5,
+                               rtol=1e-5)
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 500), n_shards=st.sampled_from([2, 4, 8]))
 def test_partition_support_covers_all(seed, n_shards):
