@@ -38,6 +38,7 @@ def main(argv=None):
         "table2_memory": tables.table2_memory,
         "kernels": kernel_bench.kernel_rows,
         "train_step_fused": kernel_bench.train_step_rows,
+        "train_step_perlayer": kernel_bench.perlayer_rows,
         "table1_support": tables.table1_support,
         "table2_ppl": tables.table2_ppl,
         "table3_throughput": tables.table3_throughput,
@@ -46,7 +47,7 @@ def main(argv=None):
         "fig4_support_seeds": tables.fig4_support_seeds,
     }
     quick = {"table2_memory", "kernels", "train_step_fused",
-             "table3_throughput", "table5_inference"}
+             "train_step_perlayer", "table3_throughput", "table5_inference"}
 
     selected = list(all_benches)
     if args.only:

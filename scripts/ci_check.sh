@@ -35,6 +35,11 @@ python -m repro.launch.train --arch llama_60m --smoke --mode sltrain \
   --exec-mode fused --steps 3 --batch 2 --seq 16 --log-every 1 \
   --ckpt-dir "$(mktemp -d)"
 
+echo "== per-layer smoke: update_mode=per_layer 8-bit 3-step train =="
+python -m repro.launch.train --arch llama_60m --smoke --mode sltrain \
+  --update-mode per_layer --optimizer adam8bit --steps 3 --batch 2 --seq 16 \
+  --log-every 1 --ckpt-dir "$(mktemp -d)"
+
 echo "== serve smoke: paged KV engine, 3 staggered requests =="
 python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8 \
   --requests 3 --stagger --slots 2 --new-tokens 4 --max-len 64

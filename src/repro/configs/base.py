@@ -172,13 +172,33 @@ class OptimizerConfig:
 
 @dataclass(frozen=True)
 class ShardingConfig:
-    """Named-axis sharding policy (DESIGN §4)."""
+    """Named-axis sharding policy + train-step execution knobs (DESIGN §4).
+
+    ``update_mode`` picks the optimizer-update schedule (ISSUE 4):
+      global    — one ``optimizer.update`` over the full gradient tree
+                  (train/step.py). Peak grad+opt-transient HBM is
+                  O(P_trainable).
+      per_layer — repro.train.perlayer: forward saves per-layer boundary
+                  activations, then a reverse sweep vjp's one layer at a
+                  time and applies that layer's update in-sweep, so
+                  co-resident grads + f32 optimizer transients are
+                  O(P_layer) (the paper's §5.1/Appendix-F "per-layer
+                  updates"; with adam8bit this is the 7B 73% path).
+    The mode composes orthogonally with ``ParamConfig.exec_mode``
+    (dense | sparse | fused): exec_mode picks how each SLTrain linear
+    RUNS, update_mode picks how its gradients are CONSUMED. Under
+    per_layer + exec_mode="fused", sliced adam8bit updates dispatch to the
+    fused Pallas kernel (kernels/adam8bit.py) instead of the XLA
+    reference. per_layer currently requires grad_accum == 1 and an
+    lm-family model (the PerLayerApi in models/registry.py).
+    """
     batch_axes: Tuple[str, ...] = ("pod", "data")
     model_axis: str = "model"
     fsdp: bool = False            # shard params/opt over the data axis too
     fsdp_axis: str = "data"
     remat: str = "none"           # none | full | dots_saveable
     grad_accum: int = 1
+    update_mode: str = "global"   # global | per_layer (see docstring)
     # int8 compression of the cross-pod gradient all-reduce (DESIGN §4)
     pod_grad_compression: bool = False
     # shard KV cache sequence dim over the model axis for long-context decode

@@ -335,6 +335,38 @@ def cache_specs(cache, mesh, batch_axes: Sequence[str] = BATCH_AXES,
     return jax.tree.map(spec, cache)
 
 
+def constrain_boundary(x, *, seq_sharded: bool = False):
+    """Sharding constraint for a per-layer boundary-activation save
+    (B, S, d) emitted by ``lm.forward_saving_boundaries``: batch dim over
+    the batch axes; with ``seq_sharded`` (cfg.seq_shard_activations) the
+    sequence dim additionally shards over the model axis, matching the SP
+    residual layout the layer body already pinned — saving the boundary
+    must not all-gather what the scan keeps sharded. Degrades to a no-op
+    off-mesh (CPU tests)."""
+    if seq_sharded:
+        return constrain(x, BATCH_AXES, MODEL_AXIS, None)
+    return constrain(x, BATCH_AXES, None, None)
+
+
+def boundary_save_specs(xs, mesh, batch_axes: Sequence[str] = BATCH_AXES,
+                        *, model_axis: str = MODEL_AXIS,
+                        seq_sharded: bool = False):
+    """Specs for STACKED boundary saves (n_layers, B, S, d): layer dim
+    replicated (the reverse sweep slices it layer by layer on every
+    device), batch over the batch axes, seq optionally over model (SP)."""
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def spec(leaf):
+        if leaf.ndim < 3:
+            return P(*([None] * leaf.ndim))
+        n_lead = leaf.ndim - 3
+        b, s, _ = leaf.shape[n_lead:]
+        seq = _guard(s, mesh, model_axis) if seq_sharded else None
+        return P(*([None] * n_lead), _guard(b, mesh, axes), seq, None)
+
+    return jax.tree.map(spec, xs)
+
+
 def named_shardings(mesh, spec_tree):
     """Map a PartitionSpec pytree to NamedShardings on ``mesh``."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,

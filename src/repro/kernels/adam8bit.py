@@ -9,8 +9,20 @@ per step, which is the dominant memory term of the optimizer phase.
 
 Layout: the flattened parameter is reshaped to (n_q, Q) quantization
 blocks (Q = oc.q_block, default 256). Grid tiles BB quantization blocks per
-kernel instance. Scalars (lr, betas, bias corrections, eps, wd) arrive as
-one (8,) f32 operand broadcast to every instance.
+kernel instance. Scalars arrive as one (10,) f32 operand broadcast to every
+instance: [lr, b1, b2, omb1, omb2, bc1, bc2, eps, wd, 0]. ``omb1``/``omb2``
+are the PRECOMPUTED (1 - beta) terms — deriving them in-kernel from the f32
+betas loses ~half the bits of (1 - b2) ≈ 1e-3 and made the kernel drift
+~1e-5 relative from the ``optim/quant.py`` reference (the ISSUE-4 audit).
+
+``n_valid`` (a separate (1,) int32 operand — parameter counts exceed the
+f32 24-bit integer range at 7B scale) masks the zero-padded tail lanes of
+the last quantization block: padded m/v are pinned to exactly 0 so the
+requantized state is BITWISE identical to the reference (which re-pads with
+zeros every step), and a padded lane can never contaminate the last real
+block's scale. The audit showed the old unmasked pads were *bounded* (the
+v floor keeps them ≤ half a quantization step below the block max) but not
+bit-identical — v pad codes round-tripped through the half-step floor.
 """
 from __future__ import annotations
 
@@ -21,22 +33,33 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(s_ref, p_ref, g_ref, mc_ref, ms_ref, vc_ref, vs_ref,
-            po_ref, mco_ref, mso_ref, vco_ref, vso_ref):
-    lr, b1, b2, bc1, bc2, eps, wd, _ = [s_ref[i] for i in range(8)]
-    g = g_ref[...].astype(jnp.float32)
+def _kernel(s_ref, n_ref, p_ref, g_ref, mc_ref, ms_ref, vc_ref, vs_ref,
+            po_ref, mco_ref, mso_ref, vco_ref, vso_ref, *, bb: int, q: int):
+    lr, b1, b2, omb1, omb2, bc1, bc2, eps, wd, _ = [s_ref[i] for i in range(10)]
+    # validity mask over this instance's (bb, q) flat lanes
+    base = pl.program_id(0) * bb * q
+    flat = base \
+        + jax.lax.broadcasted_iota(jnp.int32, (bb, q), 0) * q \
+        + jax.lax.broadcasted_iota(jnp.int32, (bb, q), 1)
+    valid = flat < n_ref[0]
+    g = jnp.where(valid, g_ref[...].astype(jnp.float32), 0.0)
     p = p_ref[...].astype(jnp.float32)
     # dequantize (symmetric signed m; shifted unsigned v). The v code is
     # floored at half a quantization step: a linear code zero-quantizes
     # small v within a block, and m/(sqrt(0)+eps) explodes the update
     # (bitsandbytes avoids this with a dynamic exponent code; the floor is
     # the linear-code equivalent — see test_adam8bit_converges_like_fp32).
+    # Padded lanes are forced to exactly 0 (the floor must not resurrect
+    # them — they carry no state and must quantize back to the same codes
+    # the reference's zero re-pad produces).
     m = mc_ref[...].astype(jnp.float32) * ms_ref[...][:, None]
     v = jnp.maximum(vc_ref[...].astype(jnp.float32) + 128.0, 0.5) \
         * vs_ref[...][:, None]
+    m = jnp.where(valid, m, 0.0)
+    v = jnp.where(valid, v, 0.0)
     # Adam
-    m = b1 * m + (1.0 - b1) * g
-    v = b2 * v + (1.0 - b2) * g * g
+    m = b1 * m + omb1 * g
+    v = b2 * v + omb2 * g * g
     u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
     u = u + wd * p
     po_ref[...] = (p - lr * u).astype(po_ref.dtype)
@@ -53,9 +76,10 @@ def _kernel(s_ref, p_ref, g_ref, mc_ref, ms_ref, vc_ref, vs_ref,
 
 @functools.partial(jax.jit, static_argnames=("bb", "interpret"))
 def adam8bit_update(p, g, m_codes, m_scales, v_codes, v_scales, scalars,
-                    *, bb: int = 64, interpret: bool = True):
+                    n_valid, *, bb: int = 64, interpret: bool = True):
     """p/g: (n_q, Q); codes: int8 (n_q, Q); scales: f32 (n_q,);
-    scalars: f32 (8,) = [lr, b1, b2, bc1, bc2, eps, wd, 0].
+    scalars: f32 (10,) = [lr, b1, b2, 1-b1, 1-b2, bc1, bc2, eps, wd, 0];
+    n_valid: int32 (1,) — count of real (unpadded) elements.
     Returns (new_p, new_m_codes, new_m_scales, new_v_codes, new_v_scales)."""
     n_q, q = p.shape
     assert n_q % bb == 0, (n_q, bb)
@@ -63,9 +87,10 @@ def adam8bit_update(p, g, m_codes, m_scales, v_codes, v_scales, scalars,
     blk2 = pl.BlockSpec((bb, q), lambda i: (i, 0))
     blk1 = pl.BlockSpec((bb,), lambda i: (i,))
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, bb=bb, q=q),
         grid=grid,
-        in_specs=[pl.BlockSpec((8,), lambda i: (0,)),
+        in_specs=[pl.BlockSpec((10,), lambda i: (0,)),
+                  pl.BlockSpec((1,), lambda i: (0,)),
                   blk2, blk2, blk2, blk1, blk2, blk1],
         out_specs=[blk2, blk2, blk1, blk2, blk1],
         out_shape=[
@@ -76,4 +101,4 @@ def adam8bit_update(p, g, m_codes, m_scales, v_codes, v_scales, scalars,
             jax.ShapeDtypeStruct((n_q,), jnp.float32),
         ],
         interpret=interpret,
-    )(scalars, p, g, m_codes, m_scales, v_codes, v_scales)
+    )(scalars, n_valid, p, g, m_codes, m_scales, v_codes, v_scales)

@@ -245,12 +245,22 @@ sl_linear.defvjp(_sl_linear_fwd, _sl_linear_bwd)
 
 def adam8bit_update(p, g, m_codes, m_scales, v_codes, v_scales, *,
                     lr, b1, b2, bc1, bc2, eps, wd, q: int = 256,
-                    interpret: bool | None = None):
-    """One fused 8-bit Adam step on an arbitrary-shape leaf."""
+                    omb1=None, omb2=None, interpret: bool | None = None):
+    """One fused 8-bit Adam step on an arbitrary-shape leaf.
+
+    ``omb1``/``omb2`` are the (1 - beta) terms; when the betas are plain
+    python floats they default to the full-precision python subtraction,
+    matching the ``optim/quant.py`` reference bitwise (an in-kernel f32
+    ``1 - b2`` loses ~half the bits of the ~1e-3 difference — ISSUE-4
+    audit)."""
     interp = INTERPRET if interpret is None else interpret
     shape = p.shape
     n = p.size
     pad = (-n) % q
+    if omb1 is None:
+        omb1 = 1.0 - b1
+    if omb2 is None:
+        omb2 = 1.0 - b2
 
     def blk(a):
         """Pad a logical-size leaf (p, g) up to whole quantization blocks.
@@ -266,10 +276,13 @@ def adam8bit_update(p, g, m_codes, m_scales, v_codes, v_scales, *,
         if n_q % cand == 0:
             bb = cand
             break
-    scalars = jnp.array([lr, b1, b2, bc1, bc2, eps, wd, 0.0], jnp.float32)
+    scalars = jnp.array([lr, b1, b2, omb1, omb2, bc1, bc2, eps, wd, 0.0],
+                        jnp.float32)
+    n_valid = jnp.array([n], jnp.int32)
     new_p, mc, ms, vc, vs = adam8bit_kernel.adam8bit_update(
         blk(p), blk(g), blk(m_codes), m_scales.reshape(-1),
-        blk(v_codes), v_scales.reshape(-1), scalars, bb=bb, interpret=interp)
+        blk(v_codes), v_scales.reshape(-1), scalars, n_valid,
+        bb=bb, interpret=interp)
     return (new_p.reshape(-1)[:n].reshape(shape), mc, ms, vc, vs)
 
 

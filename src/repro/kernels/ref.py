@@ -18,17 +18,26 @@ def sddmm_ref(x, dy, rows, cols):
     return G[rows, cols]
 
 
-def adam8bit_ref(p, g, m_codes, m_scales, v_codes, v_scales, scalars):
-    """Blockwise 8-bit Adam step; shapes as in kernels.adam8bit."""
-    lr, b1, b2, bc1, bc2, eps, wd = [scalars[i] for i in range(7)]
+def adam8bit_ref(p, g, m_codes, m_scales, v_codes, v_scales, scalars,
+                 n_valid=None):
+    """Blockwise 8-bit Adam step; shapes/scalar layout as in kernels.adam8bit
+    ((10,) scalars with precomputed 1-beta slots). ``n_valid`` masks padded
+    tail lanes exactly like the kernel (None = every lane is real)."""
+    lr, b1, b2, omb1, omb2, bc1, bc2, eps, wd = [scalars[i] for i in range(9)]
     g = g.astype(jnp.float32)
     pf = p.astype(jnp.float32)
     m = m_codes.astype(jnp.float32) * m_scales[:, None]
     # half-quant-step floor on v (see kernels/adam8bit.py)
     v = jnp.maximum(v_codes.astype(jnp.float32) + 128.0, 0.5) \
         * v_scales[:, None]
-    m = b1 * m + (1 - b1) * g
-    v = b2 * v + (1 - b2) * g * g
+    if n_valid is not None:
+        idx = jnp.arange(p.size, dtype=jnp.int32).reshape(p.shape)
+        valid = idx < n_valid
+        g = jnp.where(valid, g, 0.0)
+        m = jnp.where(valid, m, 0.0)
+        v = jnp.where(valid, v, 0.0)
+    m = b1 * m + omb1 * g
+    v = b2 * v + omb2 * g * g
     u = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * pf
     new_p = (pf - lr * u).astype(p.dtype)
     ms = jnp.max(jnp.abs(m), axis=1) / 127.0

@@ -40,7 +40,8 @@ def build_train_config(args) -> TrainConfig:
     oc = OptimizerConfig(name=args.optimizer, lr=args.lr,
                          warmup_steps=max(1, args.steps // 10),
                          total_steps=args.steps)
-    sc = ShardingConfig(remat=args.remat, grad_accum=args.grad_accum)
+    sc = ShardingConfig(remat=args.remat, grad_accum=args.grad_accum,
+                        update_mode=args.update_mode)
     return TrainConfig(model=cfg, optim=oc, sharding=sc, seed=args.seed,
                        global_batch=args.batch, seq_len=args.seq,
                        steps=args.steps, log_every=args.log_every,
@@ -70,6 +71,12 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=42)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--update-mode", default="global",
+                    choices=["global", "per_layer"],
+                    help="per_layer = layer-wise backward sweep with "
+                         "in-sweep optimizer updates (repro.train.perlayer"
+                         "; O(layer) grad residency, the paper's Appendix-F"
+                         " memory path)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")

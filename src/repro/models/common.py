@@ -187,6 +187,19 @@ def gelu(x):
 # Abstract stacking helper
 # ---------------------------------------------------------------------------
 
+def remat_wrap(fn, remat: str):
+    """Apply the configured remat policy ("none" | "full" |
+    "dots_saveable") to a scan-step/segment function. Single owner of the
+    policy-name mapping: the train forward (lm.apply_lm), the
+    boundary-saving forward and the per-layer backward sweep
+    (train/perlayer.py) must recompute under the SAME policy."""
+    if remat == "none":
+        return fn
+    policy = None if remat == "full" else \
+        jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, policy=policy)
+
+
 def stack_layers(builder: Builder, fn, n: int, name: str = "layer"):
     """Stack per-layer (params, consts) along a new leading axis.
 

@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import attention, mlp
-from repro.models.common import Builder, rms_norm, softcap, stack_layers
+from repro.models.common import (Builder, remat_wrap, rms_norm, softcap,
+                                 stack_layers)
 
 
 # ---------------------------------------------------------------------------
@@ -137,6 +138,17 @@ def _embed_tokens(cfg, params, tokens):
     return h
 
 
+def embed_apply(cfg: ModelConfig, params, tokens, patch_embeds=None):
+    """The model's input segment: token embed (+ VLM patch splice). Takes
+    only the params it reads ({"embed": leaf}) so the per-layer sweep can
+    jax.vjp it against exactly that subtree."""
+    h = _embed_tokens(cfg, params, tokens)
+    if patch_embeds is not None:
+        h = jnp.concatenate([patch_embeds.astype(h.dtype),
+                             h[:, patch_embeds.shape[1]:]], axis=1)
+    return h
+
+
 def _unembed(cfg, params, h):
     w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = h @ w.astype(h.dtype)
@@ -174,38 +186,50 @@ def _sp_constraint(cfg, h):
                                    dist_sharding.MODEL_AXIS, None)
 
 
+def period_apply(cfg: ModelConfig, p, c, x):
+    """One scan step of the layer stack: the full attn-pattern period.
+    (x, params, consts) → (x', aux). The per-layer backward sweep vjp's
+    this exact function, so train forward and sweep recompute cannot
+    drift."""
+    pat = _pattern(cfg)
+    aux = jnp.float32(0.0)
+    for j, kind in enumerate(pat):
+        x, _, a = _apply_block(cfg, p[f"k{j}"], c.get(f"k{j}", {}), x,
+                               window=_window_for(cfg, kind))
+        aux = aux + a
+    return _sp_constraint(cfg, x), aux
+
+
+def dense_apply(cfg: ModelConfig, p, c, x):
+    """One MoE first-k-dense prefix block. (x, params, consts) → (x', aux)."""
+    x, _, a = _apply_block(cfg, p, c, x, window=0)
+    return x, a
+
+
+def head_apply(cfg: ModelConfig, params, h):
+    """Final norm + unembed. ``params`` needs only the head leaves:
+    {"ln_f", "lm_head"} (untied) or {"ln_f", "embed"} (tied)."""
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps,
+                 plus_one=cfg.family in ("gemma2", "vlm"))
+    return _unembed(cfg, params, h)
+
+
 def apply_lm(cfg: ModelConfig, params, consts, tokens, *, patch_embeds=None,
              remat: str = "none"):
     """tokens: (B, S[, ]) int32 → (logits (B, S, V), aux losses).
 
     For VLM, patch_embeds (B, n_patches, d) replace the first n_patches
     positions (the stub frontend's output, DESIGN §5)."""
-    h = _embed_tokens(cfg, params, tokens)
-    if patch_embeds is not None:
-        h = jnp.concatenate([patch_embeds.astype(h.dtype),
-                             h[:, patch_embeds.shape[1]:]], axis=1)
-    pat = _pattern(cfg)
+    h = embed_apply(cfg, params, tokens, patch_embeds)
     aux_total = jnp.float32(0.0)
 
-    def period_body(x, layer):
-        p, c = layer
-        aux = jnp.float32(0.0)
-        for j, kind in enumerate(pat):
-            x, _, a = _apply_block(cfg, p[f"k{j}"], c.get(f"k{j}", {}), x,
-                                   window=_window_for(cfg, kind))
-            aux = aux + a
-        return _sp_constraint(cfg, x), aux
-
-    if remat != "none":
-        policy = None if remat == "full" else \
-            jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
-        period_body = jax.checkpoint(period_body, policy=policy)
+    period_body = remat_wrap(
+        lambda x, layer: period_apply(cfg, layer[0], layer[1], x), remat)
 
     if "dense_layers" in params:
         def dense_body(x, layer):
             p, c = layer
-            x, _, a = _apply_block(cfg, p, c, x, window=0)
-            return x, a
+            return dense_apply(cfg, p, c, x)
         h, aux_d = jax.lax.scan(dense_body, h,
                                 (params["dense_layers"],
                                  consts.get("dense_layers", {})))
@@ -214,9 +238,53 @@ def apply_lm(cfg: ModelConfig, params, consts, tokens, *, patch_embeds=None,
     h, aux = jax.lax.scan(period_body, h,
                           (params["layers"], consts.get("layers", {})))
     aux_total = aux_total + aux.sum()
-    h = rms_norm(h, params["ln_f"], cfg.norm_eps,
-                 plus_one=cfg.family in ("gemma2", "vlm"))
-    return _unembed(cfg, params, h), aux_total
+    return head_apply(cfg, params, h), aux_total
+
+
+def forward_saving_boundaries(cfg: ModelConfig, params, consts, tokens, *,
+                              patch_embeds=None, remat: str = "none"):
+    """The SAME forward as :func:`apply_lm` up to the final norm, but each
+    scan step additionally emits its INPUT boundary activation — the
+    recompute roots the per-layer backward sweep (repro.train.perlayer)
+    re-runs one layer at a time from. Saved boundaries are the only
+    O(n_layers) activation term; intra-layer residuals are recomputed per
+    layer under the configured remat policy.
+
+    Returns a dict:
+      h0        — embed output (the first boundary),
+      dense_xs  — (n_dense, B, S, d) inputs of the MoE dense prefix (or None),
+      xs        — (n_periods, B, S, d) inputs of each period scan step,
+      h_top     — final residual (input to the head),
+      aux_dense — (n_dense,) per-block aux losses (or None),
+      aux       — (n_periods,) per-period aux losses.
+    """
+    from repro.dist import sharding as dist_sharding
+    h0 = embed_apply(cfg, params, tokens, patch_embeds)
+    save = lambda x: dist_sharding.constrain_boundary(
+        x, seq_sharded=cfg.seq_shard_activations)
+
+    h = h0
+    dense_xs = aux_d = None
+    if "dense_layers" in params:
+        def dense_body(x, layer):
+            p, c = layer
+            nx, a = dense_apply(cfg, p, c, x)
+            return nx, (save(x), a)
+        h, (dense_xs, aux_d) = jax.lax.scan(
+            dense_body, h, (params["dense_layers"],
+                            consts.get("dense_layers", {})))
+
+    def period_body(x, layer):
+        p, c = layer
+        nx, a = period_apply(cfg, p, c, x)
+        return nx, (save(x), a)
+    period_body = remat_wrap(period_body, remat)
+
+    h_top, (xs, aux) = jax.lax.scan(period_body, h,
+                                    (params["layers"],
+                                     consts.get("layers", {})))
+    return {"h0": h0, "dense_xs": dense_xs, "xs": xs, "h_top": h_top,
+            "aux_dense": aux_d, "aux": aux}
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,20 @@ from repro.configs.base import ModelConfig
 
 
 @dataclass(frozen=True)
+class PerLayerApi:
+    """Segmented forward the per-layer backward sweep drives
+    (repro.train.perlayer): one callable per model segment, each taking
+    exactly the param subtree it reads so the sweep can jax.vjp segments in
+    isolation. ``forward_boundaries`` must run the SAME math as ``apply``
+    (loss parity with update_mode="global" depends on it)."""
+    forward_boundaries: Callable  # (cfg, params, consts, batch, remat) -> dict
+    embed: Callable               # (cfg, {"embed": leaf}, tokens, patches) -> h0
+    period: Callable              # (cfg, p_period, c_period, x) -> (x', aux)
+    dense: Callable               # (cfg, p_block, c_block, x) -> (x', aux)
+    head: Callable                # (cfg, head_params, h_top) -> logits
+
+
+@dataclass(frozen=True)
 class ModelApi:
     init: Callable          # (cfg, key=None, seed=0) -> (params, consts)
     apply: Callable         # (cfg, params, consts, batch, remat) -> (logits, aux)
@@ -20,6 +34,9 @@ class ModelApi:
     # batched whole-prompt forward that also writes K/V; None on families
     # without one (the serve engine's paged path requires it)
     prefill_step: Optional[Callable] = None
+    # segmented per-layer API; None on families without one (the
+    # update_mode="per_layer" train path requires it)
+    perlayer: Optional[PerLayerApi] = None
 
 
 def _lm_api():
@@ -29,8 +46,15 @@ def _lm_api():
         return lm.apply_lm(cfg, params, consts, batch["tokens"],
                            patch_embeds=batch.get("patches"), remat=remat)
 
+    def forward_boundaries(cfg, params, consts, batch, remat="none"):
+        return lm.forward_saving_boundaries(
+            cfg, params, consts, batch["tokens"],
+            patch_embeds=batch.get("patches"), remat=remat)
+
+    pl = PerLayerApi(forward_boundaries, lm.embed_apply, lm.period_apply,
+                     lm.dense_apply, lm.head_apply)
     return ModelApi(lm.init_lm, apply, lm.init_cache, lm.decode_step,
-                    lm.prefill_step)
+                    lm.prefill_step, perlayer=pl)
 
 
 def _hybrid_api():

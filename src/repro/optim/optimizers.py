@@ -9,11 +9,28 @@ All optimizers share: global-norm gradient clipping, warmup-cosine schedule,
 decoupled weight decay on >=2-D leaves. The optimizer never sees the fixed
 SLTrain support (consts live outside the trainable tree), so its state
 scales with the *trainable* parameter count — the paper's memory claim.
+
+Per-layer API (ISSUE 4, ``repro.train.perlayer``): the one-step scalar math
+is split out of ``update`` so a layer-wise backward sweep can apply one
+layer's update while only that layer's gradients exist:
+
+    ctx, stats = opt.prepare(state, global_grad_norm)   # step/lr/clip/bias
+    new_p, new_ls = opt.update_slice(ctx, p, g, ls, full_ndim=...)
+    state = opt.finish(state, ctx)                      # bump step counter
+
+``ls`` is one param leaf's state (``leaf_state``/``with_leaf_state``
+address it by tree path); ``stack_state`` reshapes it so a leading
+layer-stack axis of size n can be sliced — returning None when it cannot
+(adam8bit blocks that straddle layer boundaries, GaLore projected leaves),
+in which case the sweep accumulates that leaf's full gradient and updates
+it once at the end. The GLOBAL ``update`` of every optimizer is routed
+through the same ``prepare``/``update_slice`` path, so per-layer and global
+modes agree leaf-for-leaf by construction.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,17 +44,37 @@ from repro.optim.schedule import warmup_cosine
 class Optimizer:
     init: Callable
     update: Callable   # (grads, state, params) -> (new_params, new_state, stats)
+    # --- per-layer slice API (repro.train.perlayer); None = unsupported ---
+    prepare: Optional[Callable] = None        # (state, gnorm) -> (ctx, stats)
+    update_slice: Optional[Callable] = None   # (ctx, p, g, ls, full_ndim=None)
+    update_slice_fused: Optional[Callable] = None  # Pallas-kernel dispatch
+    leaf_state: Optional[Callable] = None     # (state, path) -> ls
+    with_leaf_state: Optional[Callable] = None  # (state, path, ls) -> state
+    stack_state: Optional[Callable] = None    # (ls, p_leaf, n) -> ls | None
+    unstack_state: Optional[Callable] = None  # (ls_stacked, p_leaf, n) -> ls
+    finish: Optional[Callable] = None         # (state, ctx) -> state
 
 
-def _clip_by_global_norm(grads, max_norm):
+def _global_norm(grads):
     leaves = jax.tree.leaves(grads)
-    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
-    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
-    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
 
 
-def _wd_mask(p):
-    return p.ndim >= 2
+# -- nested-dict path addressing (all param/state trees here are dicts) -----
+
+def _tree_get(tree, path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def _tree_set(tree, path, val):
+    if not path:
+        return val
+    out = dict(tree)
+    out[path[0]] = _tree_set(tree[path[0]], path[1:], val)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -46,6 +83,7 @@ def _wd_mask(p):
 
 def adamw(oc: OptimizerConfig) -> Optimizer:
     lr_fn = warmup_cosine(oc)
+    b1, b2 = oc.beta1, oc.beta2
 
     def init(params):
         zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
@@ -53,27 +91,61 @@ def adamw(oc: OptimizerConfig) -> Optimizer:
                 "nu": jax.tree.map(zeros, params),
                 "step": jnp.zeros((), jnp.int32)}
 
-    def update(grads, state, params):
+    def prepare(state, gnorm):
         step = state["step"] + 1
-        grads, gnorm = _clip_by_global_norm(grads, oc.grad_clip)
-        b1, b2 = oc.beta1, oc.beta2
-        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
-        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+        scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-9))
         bc1 = 1 - b1 ** step.astype(jnp.float32)
         bc2 = 1 - b2 ** step.astype(jnp.float32)
         lr = lr_fn(step)
+        ctx = {"step": step, "scale": scale, "bc1": bc1, "bc2": bc2, "lr": lr}
+        return ctx, {"grad_norm": gnorm, "lr": lr}
 
-        def upd(p, m, v):
-            u = (m / bc1) / (jnp.sqrt(v / bc2) + oc.eps)
-            if oc.weight_decay > 0 and _wd_mask(p):
-                u = u + oc.weight_decay * p.astype(jnp.float32)
-            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+    def update_slice(ctx, p, g, ls, full_ndim=None):
+        g = g.astype(jnp.float32) * ctx["scale"]
+        m = b1 * ls["mu"] + (1 - b1) * g
+        v = b2 * ls["nu"] + (1 - b2) * g * g
+        u = (m / ctx["bc1"]) / (jnp.sqrt(v / ctx["bc2"]) + oc.eps)
+        nd = p.ndim if full_ndim is None else full_ndim
+        if oc.weight_decay > 0 and nd >= 2:
+            u = u + oc.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - ctx["lr"] * u).astype(p.dtype)
+        return new_p, {"mu": m, "nu": v}
 
-        new_params = jax.tree.map(upd, params, mu, nu)
-        return new_params, {"mu": mu, "nu": nu, "step": step}, \
-            {"grad_norm": gnorm, "lr": lr}
+    def update(grads, state, params):
+        ctx, stats = prepare(state, _global_norm(grads))
+        paired = jax.tree.map(
+            lambda p, g, m, v: update_slice(ctx, p, g, {"mu": m, "nu": v}),
+            params, grads, state["mu"], state["nu"])
+        is_pair = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t: t[0], paired, is_leaf=is_pair)
+        mu = jax.tree.map(lambda t: t[1]["mu"], paired, is_leaf=is_pair)
+        nu = jax.tree.map(lambda t: t[1]["nu"], paired, is_leaf=is_pair)
+        return new_params, {"mu": mu, "nu": nu, "step": ctx["step"]}, stats
 
-    return Optimizer(init, update)
+    def leaf_state(state, path):
+        return {"mu": _tree_get(state["mu"], path),
+                "nu": _tree_get(state["nu"], path)}
+
+    def with_leaf_state(state, path, ls):
+        out = dict(state)
+        out["mu"] = _tree_set(state["mu"], path, ls["mu"])
+        out["nu"] = _tree_set(state["nu"], path, ls["nu"])
+        return out
+
+    def stack_state(ls, p_leaf, n):
+        # moments mirror the param leaf, whose leading axis IS the stack
+        return ls
+
+    def unstack_state(ls, p_leaf, n):
+        return ls
+
+    def finish(state, ctx):
+        return {**state, "step": ctx["step"]}
+
+    return Optimizer(init, update, prepare=prepare, update_slice=update_slice,
+                     leaf_state=leaf_state, with_leaf_state=with_leaf_state,
+                     stack_state=stack_state, unstack_state=unstack_state,
+                     finish=finish)
 
 
 # ---------------------------------------------------------------------------
@@ -82,6 +154,7 @@ def adamw(oc: OptimizerConfig) -> Optimizer:
 
 def adam8bit(oc: OptimizerConfig) -> Optimizer:
     lr_fn = warmup_cosine(oc)
+    b1, b2 = oc.beta1, oc.beta2
     block = oc.q_block
 
     def _q(x, signed):
@@ -100,41 +173,108 @@ def adam8bit(oc: OptimizerConfig) -> Optimizer:
                 "nu": jax.tree.map(qz_u, params),
                 "step": jnp.zeros((), jnp.int32)}
 
-    def update(grads, state, params):
+    def prepare(state, gnorm):
         step = state["step"] + 1
-        grads, gnorm = _clip_by_global_norm(grads, oc.grad_clip)
-        b1, b2 = oc.beta1, oc.beta2
+        scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-9))
         bc1 = 1 - b1 ** step.astype(jnp.float32)
         bc2 = 1 - b2 ** step.astype(jnp.float32)
         lr = lr_fn(step)
+        ctx = {"step": step, "scale": scale, "bc1": bc1, "bc2": bc2, "lr": lr}
+        return ctx, {"grad_norm": gnorm, "lr": lr}
 
-        def upd(p, g, mq, vq):
-            n = p.size
-            m = quant.dequantize_blockwise(mq["codes"], mq["scales"], n, p.shape, True)
-            v = quant.dequantize_blockwise(vq["codes"], vq["scales"], n, p.shape, False)
-            m = b1 * m + (1 - b1) * g
-            v = b2 * v + (1 - b2) * g * g
-            u = (m / bc1) / (jnp.sqrt(v / bc2) + oc.eps)
-            if oc.weight_decay > 0 and _wd_mask(p):
-                u = u + oc.weight_decay * p.astype(jnp.float32)
-            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
-            mc, ms, _ = _q(m, True)
-            vc, vs, _ = _q(v, False)
-            return new_p, {"codes": mc, "scales": ms}, {"codes": vc, "scales": vs}
+    def update_slice(ctx, p, g, ls, full_ndim=None):
+        """XLA reference path: dequantize -> f32 Adam -> requantize. Blocks
+        are independent, so applying this to a layer slice whose flat size
+        is a whole number of q-blocks is bitwise identical to the global
+        update of those blocks."""
+        g = g.astype(jnp.float32) * ctx["scale"]
+        n = p.size
+        m = quant.dequantize_blockwise(ls["mu"]["codes"], ls["mu"]["scales"],
+                                       n, p.shape, True)
+        v = quant.dequantize_blockwise(ls["nu"]["codes"], ls["nu"]["scales"],
+                                       n, p.shape, False)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / ctx["bc1"]) / (jnp.sqrt(v / ctx["bc2"]) + oc.eps)
+        nd = p.ndim if full_ndim is None else full_ndim
+        if oc.weight_decay > 0 and nd >= 2:
+            u = u + oc.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - ctx["lr"] * u).astype(p.dtype)
+        mc, ms, _ = _q(m, True)
+        vc, vs, _ = _q(v, False)
+        return new_p, {"mu": {"codes": mc, "scales": ms},
+                       "nu": {"codes": vc, "scales": vs}}
 
+    def update_slice_fused(ctx, p, g, ls, full_ndim=None):
+        """Pallas-kernel dispatch: one fused pass, f32 moments only in VMEM.
+        Tracks the XLA path to codes-exact / params-ulp (tests/test_kernels
+        tail-trajectory parity)."""
+        from repro.kernels import ops
+        g = g.astype(jnp.float32) * ctx["scale"]
+        nd = p.ndim if full_ndim is None else full_ndim
+        wd = oc.weight_decay if (oc.weight_decay > 0 and nd >= 2) else 0.0
+        new_p, mc, ms, vc, vs = ops.adam8bit_update(
+            p, g, ls["mu"]["codes"], ls["mu"]["scales"],
+            ls["nu"]["codes"], ls["nu"]["scales"],
+            lr=ctx["lr"], b1=b1, b2=b2, bc1=ctx["bc1"], bc2=ctx["bc2"],
+            eps=oc.eps, wd=wd, q=block)
+        return new_p, {"mu": {"codes": mc, "scales": ms},
+                       "nu": {"codes": vc, "scales": vs}}
+
+    def update(grads, state, params):
+        ctx, stats = prepare(state, _global_norm(grads))
         flat_p, treedef = jax.tree.flatten(params)
         flat_g = treedef.flatten_up_to(grads)
         flat_m = treedef.flatten_up_to(state["mu"])
         flat_v = treedef.flatten_up_to(state["nu"])
-        out = [upd(p, g, m, v) for p, g, m, v in
-               zip(flat_p, flat_g, flat_m, flat_v)]
+        out = [update_slice(ctx, p, g, {"mu": m, "nu": v})
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
         new_params = treedef.unflatten([o[0] for o in out])
-        mu = treedef.unflatten([o[1] for o in out])
-        nu = treedef.unflatten([o[2] for o in out])
-        return new_params, {"mu": mu, "nu": nu, "step": step}, \
-            {"grad_norm": gnorm, "lr": lr}
+        mu = treedef.unflatten([o[1]["mu"] for o in out])
+        nu = treedef.unflatten([o[1]["nu"] for o in out])
+        return new_params, {"mu": mu, "nu": nu, "step": ctx["step"]}, stats
 
-    return Optimizer(init, update)
+    def leaf_state(state, path):
+        return {"mu": _tree_get(state["mu"], path),
+                "nu": _tree_get(state["nu"], path)}
+
+    def with_leaf_state(state, path, ls):
+        out = dict(state)
+        out["mu"] = _tree_set(state["mu"], path, ls["mu"])
+        out["nu"] = _tree_set(state["nu"], path, ls["nu"])
+        return out
+
+    def stack_state(ls, p_leaf, n):
+        """Reshape codes/scales so axis 0 indexes the n layer slices.
+        Possible exactly when each slice is a whole number of q-blocks —
+        otherwise blocks straddle layer boundaries and the leaf must take
+        the deferred full-gradient path (returns None)."""
+        if n <= 0 or p_leaf.size % n:
+            return None
+        per = p_leaf.size // n
+        if per % block:
+            return None
+        bpl = per // block
+
+        def go(moment):
+            return {"codes": moment["codes"].reshape(n, bpl, block),
+                    "scales": moment["scales"].reshape(n, bpl)}
+        return {"mu": go(ls["mu"]), "nu": go(ls["nu"])}
+
+    def unstack_state(ls, p_leaf, n):
+        def go(moment):
+            return {"codes": moment["codes"].reshape(-1, block),
+                    "scales": moment["scales"].reshape(-1)}
+        return {"mu": go(ls["mu"]), "nu": go(ls["nu"])}
+
+    def finish(state, ctx):
+        return {**state, "step": ctx["step"]}
+
+    return Optimizer(init, update, prepare=prepare, update_slice=update_slice,
+                     update_slice_fused=update_slice_fused,
+                     leaf_state=leaf_state, with_leaf_state=with_leaf_state,
+                     stack_state=stack_state, unstack_state=unstack_state,
+                     finish=finish)
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +287,7 @@ def galore_adamw(oc: OptimizerConfig, project_fn: Callable | None = None
     Default: 2-D leaves with both dims > galore_rank (linear weights)."""
     lr_fn = warmup_cosine(oc)
     r = oc.galore_rank
+    b1, b2 = oc.beta1, oc.beta2
 
     def is_proj(path, p):
         if project_fn is not None:
@@ -169,47 +310,53 @@ def galore_adamw(oc: OptimizerConfig, project_fn: Callable | None = None
         return {"leaves": jax.tree_util.tree_map_with_path(st, params),
                 "step": jnp.zeros((), jnp.int32)}
 
-    def update(grads, state, params):
+    def prepare(state, gnorm):
         step = state["step"] + 1
-        grads, gnorm = _clip_by_global_norm(grads, oc.grad_clip)
-        b1, b2 = oc.beta1, oc.beta2
+        scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-9))
         bc1 = 1 - b1 ** step.astype(jnp.float32)
         bc2 = 1 - b2 ** step.astype(jnp.float32)
         lr = lr_fn(step)
         refresh = (step - 1) % oc.galore_update_proj_gap == 0
+        ctx = {"step": step, "scale": scale, "bc1": bc1, "bc2": bc2,
+               "lr": lr, "refresh": refresh}
+        return ctx, {"grad_norm": gnorm, "lr": lr}
 
-        def upd(path, p, g, st):
-            if "P" not in st:
-                m = b1 * st["mu"] + (1 - b1) * g
-                v = b2 * st["nu"] + (1 - b2) * g * g
-                u = (m / bc1) / (jnp.sqrt(v / bc2) + oc.eps)
-                if oc.weight_decay > 0 and _wd_mask(p):
-                    u = u + oc.weight_decay * p.astype(jnp.float32)
-                return (p.astype(jnp.float32) - lr * u).astype(p.dtype), \
-                    {"mu": m, "nu": v}
-            d, q = p.shape
-            left = d <= q
-
-            def new_P(_):
-                # top-r singular vectors of the current gradient
-                if left:
-                    u_, _, _ = jnp.linalg.svd(g @ g.T)   # (d,d)
-                    return u_[:, :r]
-                _, _, vt = jnp.linalg.svd(g.T @ g)       # (q,q)
-                return vt[:r].T
-            P = jax.lax.cond(refresh, new_P, lambda _: st["P"], None)
-            R = P.T @ g if left else g @ P               # projected gradient
-            m = b1 * st["mu"] + (1 - b1) * R
-            v = b2 * st["nu"] + (1 - b2) * R * R
-            u_low = (m / bc1) / (jnp.sqrt(v / bc2) + oc.eps)
-            u = (P @ u_low if left else u_low @ P.T) * oc.galore_scale
-            if oc.weight_decay > 0:
+    def update_slice(ctx, p, g, ls, full_ndim=None):
+        g = g.astype(jnp.float32) * ctx["scale"]
+        nd = p.ndim if full_ndim is None else full_ndim
+        if "P" not in ls:
+            m = b1 * ls["mu"] + (1 - b1) * g
+            v = b2 * ls["nu"] + (1 - b2) * g * g
+            u = (m / ctx["bc1"]) / (jnp.sqrt(v / ctx["bc2"]) + oc.eps)
+            if oc.weight_decay > 0 and nd >= 2:
                 u = u + oc.weight_decay * p.astype(jnp.float32)
-            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), \
-                {"P": P, "mu": m, "nu": v}
+            return (p.astype(jnp.float32) - ctx["lr"] * u).astype(p.dtype), \
+                {"mu": m, "nu": v}
+        d, q = p.shape
+        left = d <= q
 
+        def new_P(_):
+            # top-r singular vectors of the current gradient
+            if left:
+                u_, _, _ = jnp.linalg.svd(g @ g.T)   # (d,d)
+                return u_[:, :r]
+            _, _, vt = jnp.linalg.svd(g.T @ g)       # (q,q)
+            return vt[:r].T
+        P = jax.lax.cond(ctx["refresh"], new_P, lambda _: ls["P"], None)
+        R = P.T @ g if left else g @ P               # projected gradient
+        m = b1 * ls["mu"] + (1 - b1) * R
+        v = b2 * ls["nu"] + (1 - b2) * R * R
+        u_low = (m / ctx["bc1"]) / (jnp.sqrt(v / ctx["bc2"]) + oc.eps)
+        u = (P @ u_low if left else u_low @ P.T) * oc.galore_scale
+        if oc.weight_decay > 0:
+            u = u + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - ctx["lr"] * u).astype(p.dtype), \
+            {"P": P, "mu": m, "nu": v}
+
+    def update(grads, state, params):
+        ctx, stats = prepare(state, _global_norm(grads))
         paired = jax.tree_util.tree_map_with_path(
-            lambda path, p, g, st: upd(path, p, g, st),
+            lambda path, p, g, st: update_slice(ctx, p, g, st),
             params, grads, state["leaves"],
             is_leaf=lambda x: isinstance(x, jnp.ndarray))
         # unzip (params, state) tuples
@@ -217,10 +364,32 @@ def galore_adamw(oc: OptimizerConfig, project_fn: Callable | None = None
                                   is_leaf=lambda x: isinstance(x, tuple))
         new_leaves = jax.tree.map(lambda t: t[1], paired,
                                   is_leaf=lambda x: isinstance(x, tuple))
-        return new_params, {"leaves": new_leaves, "step": step}, \
-            {"grad_norm": gnorm, "lr": lr}
+        return new_params, {"leaves": new_leaves, "step": ctx["step"]}, stats
 
-    return Optimizer(init, update)
+    def leaf_state(state, path):
+        return _tree_get(state["leaves"], path)
+
+    def with_leaf_state(state, path, ls):
+        return {**state, "leaves": _tree_set(state["leaves"], path, ls)}
+
+    def stack_state(ls, p_leaf, n):
+        # projected state shares one P/moment pair across the whole leaf —
+        # it cannot be sliced layer-wise (and stacked >=3-D leaves are
+        # never projected, see is_proj)
+        if "P" in ls:
+            return None
+        return ls
+
+    def unstack_state(ls, p_leaf, n):
+        return ls
+
+    def finish(state, ctx):
+        return {**state, "step": ctx["step"]}
+
+    return Optimizer(init, update, prepare=prepare, update_slice=update_slice,
+                     leaf_state=leaf_state, with_leaf_state=with_leaf_state,
+                     stack_state=stack_state, unstack_state=unstack_state,
+                     finish=finish)
 
 
 def make(oc: OptimizerConfig) -> Optimizer:

@@ -1,0 +1,285 @@
+"""repro.train.perlayer — layer-wise backward with in-sweep optimizer
+updates (the paper's "per-layer updates" memory path, §5.1 / Appendix F).
+
+The global train step (``train/step.py``) materializes the FULL-model
+gradient tree (f32 after clipping) before one ``optimizer.update`` — peak
+grad+optimizer-transient HBM is O(P_trainable) no matter how lean the
+parameterization is. This engine removes that term:
+
+  1. **Forward once** over the stacked layer scan, saving only the
+     per-layer boundary activations (``lm.forward_saving_boundaries``; the
+     existing remat policies govern intra-layer residuals).
+  2. **Norm sweep** (reverse): re-run one layer's vjp at a time, reduce its
+     gradients to a squared-norm contribution immediately, and keep only
+     the boundary cotangent. This recovers the exact global gradient norm
+     the clip/stat needs *before any update* — the LOMO two-pass trick
+     (PAPERS: Lv et al.); it trades one extra backward recompute for never
+     holding two layers' grads at once.
+  3. **Update sweep** (reverse): re-run each layer's vjp and immediately
+     apply that layer's optimizer update through the per-layer slice API
+     (``Optimizer.update_slice``, dispatching to the fused ``adam8bit``
+     Pallas kernel when ``fused_opt`` — default when the model's
+     ``exec_mode == "fused"`` — or the XLA reference otherwise) before the
+     next layer's grads exist. Co-resident state is O(one layer) of grads
+     + f32 transients instead of O(model).
+
+Update order inside a step is head → layers (top to bottom) → embed; for
+Adam-family optimizers this is value-identical to the global step because
+no layer's update feeds another layer's gradient within the step (all vjps
+re-run from the pre-step params saved in the forward), and the clip scale
+comes from the dedicated norm sweep. Checkpoints stay layout-identical to
+``update_mode="global"``: params and optimizer state trees are untouched —
+only the order in which their leaves are written differs.
+
+Leaves whose optimizer state cannot be sliced along the layer axis
+(``stack_state`` returns None: 8-bit quantization blocks straddling layer
+boundaries, GaLore projected leaves) take a deferred path — their full
+stacked gradient is accumulated through the sweep (as scan outputs) and
+updated once at the end, exactly like global mode. These are the small
+leaves (norms, odd-sized supports); the big matrices slice.
+
+Tied embeddings are supported but carry the head's embed cotangent
+(V × d f32) across the sweep — the paper's LLaMA configs are untied.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import remat_wrap
+from repro.models.registry import ModelApi
+from repro.optim.optimizers import Optimizer
+from repro.train.step import cross_entropy
+
+
+def _pk(path):
+    """Tree path -> tuple of plain str dict keys."""
+    out = []
+    for k in path:
+        key = getattr(k, "key", None)
+        out.append(str(key) if key is not None else str(k))
+    return tuple(out)
+
+
+def _sq(tree):
+    return sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+               for g in jax.tree.leaves(tree))
+
+
+def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
+                             optimizer: Optimizer, *, remat: str = "none",
+                             grad_accum: int = 1, aux_coef: float = 0.01,
+                             fused_opt: bool | None = None):
+    """Returns train_step(params, opt_state, consts, batch) ->
+    (params, opt_state, metrics) with per-layer in-sweep updates.
+
+    ``fused_opt`` routes sliced updates through
+    ``optimizer.update_slice_fused`` (the Pallas adam8bit kernel) when the
+    optimizer provides it; default follows the model's exec mode
+    (``cfg.param.exec_mode == "fused"``)."""
+    if grad_accum != 1:
+        raise ValueError("update_mode='per_layer' does not compose with "
+                         "grad_accum > 1 yet — the microbatch scan would "
+                         "re-materialize the full gradient tree the mode "
+                         "exists to avoid")
+    plapi = api.perlayer
+    if plapi is None:
+        raise ValueError(f"update_mode='per_layer' needs the per-layer "
+                         f"model API; family {cfg.family!r} does not "
+                         f"expose one")
+    for fn in ("prepare", "update_slice", "leaf_state", "with_leaf_state",
+               "stack_state", "unstack_state", "finish"):
+        if getattr(optimizer, fn) is None:
+            raise ValueError(f"optimizer lacks the per-layer slice API "
+                             f"({fn}); update_mode='per_layer' supports "
+                             f"adamw, adam8bit and galore_adamw")
+    if fused_opt is None:
+        fused_opt = cfg.param.exec_mode == "fused"
+    upd = optimizer.update_slice
+    if fused_opt and optimizer.update_slice_fused is not None:
+        upd = optimizer.update_slice_fused
+    aux_ct = jnp.float32(aux_coef)
+    tied = cfg.tie_embeddings
+
+    def head_params_of(params):
+        hp = {"ln_f": params["ln_f"]}
+        if tied:
+            hp["embed"] = params["embed"]
+        else:
+            hp["lm_head"] = params["lm_head"]
+        return hp
+
+    def head_ce(hp, h_top, tokens):
+        logits = plapi.head(cfg, hp, h_top)
+        return cross_entropy(logits[:, :-1], tokens[:, 1:], cfg.vocab_size)
+
+    def stack_fns(group):
+        """(layer_fn, params_key) for one stacked group."""
+        seg = plapi.period if group == "layers" else plapi.dense
+
+        def factory(c_i):
+            return remat_wrap(lambda p, x: seg(cfg, p, c_i, x), remat)
+        return factory
+
+    def sweep(group, params, consts, bxs, dh, ctx, state):
+        """Reverse-scan one stacked group.
+
+        ctx/state None  → norm sweep: returns (dh_bottom, sq_norm_sum).
+        ctx/state given → update sweep: applies sliced updates in-scan,
+        defers non-sliceable leaves; returns
+        (dh_bottom, new_group_params, new_state)."""
+        p_sub = params[group]
+        c_sub = consts.get(group, {})
+        factory = stack_fns(group)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(p_sub)
+        paths = [_pk(p) for p, _ in flat]
+        leaves = [l for _, l in flat]
+        n = leaves[0].shape[0]
+        norm_pass = ctx is None
+
+        stacked_ls, sliceable = [], []
+        if not norm_pass:
+            for path, leaf in zip(paths, leaves):
+                ls = optimizer.leaf_state(state, (group,) + path)
+                st = optimizer.stack_state(ls, leaf, n)
+                sliceable.append(st is not None)
+                if st is not None:
+                    stacked_ls.append(st)
+        xs = (p_sub, c_sub, bxs, tuple(stacked_ls))
+
+        def body(carry, xs_i):
+            p_i, c_i, x_i, ls_i = xs_i
+            f = factory(c_i)
+            _, pull = jax.vjp(f, p_i, x_i)
+            if norm_pass:
+                dh_c, acc = carry
+                dp, dx = pull((dh_c, aux_ct))
+                return (dx, acc + _sq(dp)), None
+            dh_c = carry
+            dp, dx = pull((dh_c, aux_ct))
+            p_leaves = treedef.flatten_up_to(p_i)
+            g_leaves = treedef.flatten_up_to(dp)
+            new_p, new_ls, res_g, k = [], [], [], 0
+            for j, path in enumerate(paths):
+                if sliceable[j]:
+                    np_, nls = upd(ctx, p_leaves[j], g_leaves[j], ls_i[k],
+                                   full_ndim=leaves[j].ndim)
+                    new_p.append(np_)
+                    new_ls.append(nls)
+                    k += 1
+                else:
+                    new_p.append(p_leaves[j])
+                    res_g.append(g_leaves[j].astype(jnp.float32))
+            return dx, (tuple(new_p), tuple(new_ls), tuple(res_g))
+
+        if norm_pass:
+            (dh, acc), _ = jax.lax.scan(body, (dh, jnp.float32(0.0)), xs,
+                                        reverse=True)
+            return dh, acc
+
+        dh, (new_p, new_ls, res_g) = jax.lax.scan(body, dh, xs, reverse=True)
+        # write back: scan stacks ys at their original layer index, so the
+        # sliceable outputs already ARE the updated stacked leaves
+        out_leaves, k, r = [], 0, 0
+        for j, path in enumerate(paths):
+            full = (group,) + path
+            if sliceable[j]:
+                out_leaves.append(new_p[j])
+                ls = optimizer.unstack_state(new_ls[k], leaves[j], n)
+                state = optimizer.with_leaf_state(state, full, ls)
+                k += 1
+            else:
+                # deferred: the stacked gradient was accumulated through
+                # the sweep; update the whole leaf exactly like global mode
+                ls = optimizer.leaf_state(state, full)
+                np_, nls = upd_full(ctx, leaves[j], res_g[r], ls)
+                out_leaves.append(np_)
+                state = optimizer.with_leaf_state(state, full, nls)
+                r += 1
+        return dh, treedef.unflatten(out_leaves), state
+
+    def upd_full(ctx, p, g, ls):
+        """Whole-leaf update (head / embed / deferred leaves): a whole
+        leaf is its own 'slice', through the same dispatch as the sweep —
+        under ``fused_opt`` the Pallas kernel handles these too (its
+        wrapper pads arbitrary shapes to whole q-blocks), which is what
+        the memory model's zero-HBM-transient claim assumes. GaLore's
+        projected leaves only ever land here and galore has no fused
+        variant, so they always take the reference path."""
+        return upd(ctx, p, g, ls)
+
+    def train_step(params, opt_state, consts, batch):
+        tokens = batch["tokens"]
+        patches = batch.get("patches")
+
+        # ---- forward, saving per-layer boundaries -----------------------
+        bnd = plapi.forward_boundaries(cfg, params, consts, batch,
+                                       remat=remat)
+        aux_total = jnp.float32(0.0)
+        if bnd["aux_dense"] is not None:
+            aux_total = aux_total + bnd["aux_dense"].sum()
+        aux_total = aux_total + bnd["aux"].sum()
+
+        hp = head_params_of(params)
+        ce, head_pull = jax.vjp(
+            lambda hp_, h_: head_ce(hp_, h_, tokens), hp, bnd["h_top"])
+        loss = ce + aux_coef * aux_total
+
+        def emb_fn(ep):
+            return plapi.embed(cfg, ep, tokens, patches)
+
+        # ---- pass 1: exact global grad norm (LOMO-style norm sweep) -----
+        d_head, dh = head_pull(jnp.float32(1.0))
+        d_emb_top = d_head.pop("embed", None)  # tied: fold in at the bottom
+        total_sq = _sq(d_head)
+        dh1 = dh
+        if "layers" in params:
+            dh1, acc = sweep("layers", params, consts, bnd["xs"], dh1,
+                             None, None)
+            total_sq = total_sq + acc
+        if "dense_layers" in params:
+            dh1, acc = sweep("dense_layers", params, consts,
+                             bnd["dense_xs"], dh1, None, None)
+            total_sq = total_sq + acc
+        _, emb_pull = jax.vjp(emb_fn, {"embed": params["embed"]})
+        d_embed = emb_pull(dh1)[0]["embed"]
+        if d_emb_top is not None:
+            d_embed = d_embed.astype(jnp.float32) + d_emb_top
+        total_sq = total_sq + _sq(d_embed)
+        gnorm = jnp.sqrt(total_sq)
+
+        # ---- pass 2: update sweep (grads exist one layer at a time) -----
+        ctx, stats = optimizer.prepare(opt_state, gnorm)
+        state = opt_state
+        new_params = dict(params)
+
+        d_head, dh = head_pull(jnp.float32(1.0))
+        d_emb_top = d_head.pop("embed", None)
+        for key, g in d_head.items():
+            ls = optimizer.leaf_state(state, (key,))
+            np_, nls = upd_full(ctx, params[key], g, ls)
+            new_params[key] = np_
+            state = optimizer.with_leaf_state(state, (key,), nls)
+
+        if "layers" in params:
+            dh, new_params["layers"], state = sweep(
+                "layers", params, consts, bnd["xs"], dh, ctx, state)
+        if "dense_layers" in params:
+            dh, new_params["dense_layers"], state = sweep(
+                "dense_layers", params, consts, bnd["dense_xs"], dh, ctx,
+                state)
+
+        d_embed = emb_pull(dh)[0]["embed"]
+        if d_emb_top is not None:
+            d_embed = d_embed.astype(jnp.float32) + d_emb_top
+        ls = optimizer.leaf_state(state, ("embed",))
+        np_, nls = upd_full(ctx, params["embed"], d_embed, ls)
+        new_params["embed"] = np_
+        state = optimizer.with_leaf_state(state, ("embed",), nls)
+
+        state = optimizer.finish(state, ctx)
+        metrics = {"loss": loss, "ce": ce, "aux": aux_total, **stats}
+        return new_params, state, metrics
+
+    return train_step

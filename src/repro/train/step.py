@@ -49,20 +49,24 @@ def make_train_step(cfg: ModelConfig, api: ModelApi, optimizer: Optimizer,
             (loss, parts), grads = vg(params, consts, batch)
         else:
             def micro(carry, mb):
-                acc, loss_acc = carry
-                (l, _), g = vg(params, consts, mb)
-                return (jax.tree.map(jnp.add, acc, g), loss_acc + l), None
+                acc, loss_acc, parts_acc = carry
+                (l, pt), g = vg(params, consts, mb)
+                return (jax.tree.map(jnp.add, acc, g), loss_acc + l,
+                        jax.tree.map(jnp.add, parts_acc, pt)), None
 
             def split(leaf):
                 b = leaf.shape[0]
                 return leaf.reshape(grad_accum, b // grad_accum, *leaf.shape[1:])
             micro_batches = jax.tree.map(split, batch)
             zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (grads, loss), _ = jax.lax.scan(micro, (zeros, jnp.float32(0.0)),
-                                            micro_batches)
+            parts0 = {"ce": jnp.float32(0.0), "aux": jnp.float32(0.0)}
+            (grads, loss, parts), _ = jax.lax.scan(
+                micro, (zeros, jnp.float32(0.0), parts0), micro_batches)
             grads = jax.tree.map(lambda g: g / grad_accum, grads)
             loss = loss / grad_accum
-            parts = {"ce": loss, "aux": jnp.float32(0.0)}
+            # average the true ce/aux split like the loss — fabricating
+            # aux=0 here hid every MoE router-aux signal under grad accum
+            parts = jax.tree.map(lambda x: x / grad_accum, parts)
         new_params, new_opt, stats = optimizer.update(grads, opt_state, params)
         metrics = {"loss": loss, **parts, **stats}
         return new_params, new_opt, metrics

@@ -135,9 +135,20 @@ class Trainer:
         self._preempted = False
         self.metrics_history: List[Dict[str, float]] = []
 
-        self._train_step = jax.jit(step_lib.make_train_step(
-            self.cfg, self.api, self.optimizer,
-            remat=tc.sharding.remat, grad_accum=tc.sharding.grad_accum))
+        if tc.sharding.update_mode == "per_layer":
+            from repro.train import perlayer
+            self._train_step = jax.jit(perlayer.make_perlayer_train_step(
+                self.cfg, self.api, self.optimizer,
+                remat=tc.sharding.remat,
+                grad_accum=tc.sharding.grad_accum))
+        elif tc.sharding.update_mode == "global":
+            self._train_step = jax.jit(step_lib.make_train_step(
+                self.cfg, self.api, self.optimizer,
+                remat=tc.sharding.remat, grad_accum=tc.sharding.grad_accum))
+        else:
+            raise ValueError(f"unknown update_mode "
+                             f"{tc.sharding.update_mode!r}: expected "
+                             f"'global' or 'per_layer'")
         self._relora_merge = jax.jit(_make_relora_merge(self.cfg)) \
             if self.cfg.param.mode == "relora" else None
 

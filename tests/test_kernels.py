@@ -117,14 +117,60 @@ def test_adam8bit_matches_oracle(n, wd):
     pad = (-n) % 256
     pp = jnp.pad(p, (0, pad)).reshape(-1, 256)
     gg = jnp.pad(g, (0, pad)).reshape(-1, 256)
-    scalars = jnp.array([kw["lr"], kw["b1"], kw["b2"], kw["bc1"], kw["bc2"],
+    scalars = jnp.array([kw["lr"], kw["b1"], kw["b2"], 1 - kw["b1"],
+                         1 - kw["b2"], kw["bc1"], kw["bc2"],
                          kw["eps"], kw["wd"], 0.0])
     rp, rmc, rms, rvc, rvs = ref.adam8bit_ref(
-        pp, gg, mc.reshape(-1, 256), ms, vc.reshape(-1, 256), vs, scalars)
+        pp, gg, mc.reshape(-1, 256), ms, vc.reshape(-1, 256), vs, scalars,
+        n_valid=n)
     np.testing.assert_allclose(np.asarray(newp),
                                np.asarray(rp).reshape(-1)[:n], atol=2e-5)
     assert (np.asarray(mc2) == np.asarray(rmc)).all()
     assert (np.asarray(vc2) == np.asarray(rvc)).all()
+
+
+@pytest.mark.parametrize("n", [255, 256, 257, 100, 5 * 256 + 13])
+def test_adam8bit_tail_blocks_track_quant_reference(n):
+    """ISSUE-4 tail audit regression: over a multi-step trajectory with
+    sizes straddling q_block (q±1, single partial block, multi-block with
+    tail), the fused kernel must stay BITWISE identical to the
+    optim/quant.py reference round-trip — codes exactly (including the
+    padded tail lanes, which the kernel now masks to zero like the
+    reference's re-pad), scales to ~1 f32 ulp (FMA contraction may differ
+    between the interpret-mode kernel and fused XLA), params to ulp noise.
+    The padded tail must never contaminate the last real block's scale."""
+    rng = np.random.default_rng(n)
+    p8 = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    pr = p8
+    mc, ms, _ = quant.quantize_blockwise(jnp.zeros(n), 256, True)
+    vc, vs, _ = quant.quantize_blockwise(jnp.zeros(n), 256, False)
+    mrc, mrs, vrc, vrs = mc, ms, vc, vs
+    b1, b2, lr, eps = 0.9, 0.999, 0.01, 1e-8
+    for t in range(1, 12):
+        g = rng.standard_normal(n)
+        # decay the tail block's real gradients so a pad-lane leak (the old
+        # 0.5-floor round-trip) would eventually dominate the block max
+        g[-(n % 256 or 256):] *= 0.5 ** t
+        g = jnp.asarray(g, jnp.float32)
+        bc1, bc2 = 1 - b1 ** t, 1 - b2 ** t
+        p8, mc, ms, vc, vs = ops.adam8bit_update(
+            p8, g, mc, ms, vc, vs, lr=lr, b1=b1, b2=b2, bc1=bc1, bc2=bc2,
+            eps=eps, wd=0.0)
+        m = quant.dequantize_blockwise(mrc, mrs, n, (n,), True)
+        v = quant.dequantize_blockwise(vrc, vrs, n, (n,), False)
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        pr = pr - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        mrc, mrs, _ = quant.quantize_blockwise(m, 256, True)
+        vrc, vrs, _ = quant.quantize_blockwise(v, 256, False)
+        assert (np.asarray(mc) == np.asarray(mrc)).all(), t
+        assert (np.asarray(vc) == np.asarray(vrc)).all(), t
+        np.testing.assert_allclose(np.asarray(ms), np.asarray(mrs),
+                                   rtol=1e-6, atol=0)
+        np.testing.assert_allclose(np.asarray(vs), np.asarray(vrs),
+                                   rtol=1e-6, atol=0)
+        np.testing.assert_allclose(np.asarray(p8), np.asarray(pr), atol=1e-6)
 
 
 def test_adam8bit_converges_like_fp32_adam():
