@@ -32,13 +32,14 @@ def main(argv=None):
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
 
-    from benchmarks import kernel_bench, tables
+    from benchmarks import kernel_bench, serve_bench, tables
 
     all_benches = {
         "table2_memory": tables.table2_memory,
         "kernels": kernel_bench.kernel_rows,
         "train_step_fused": kernel_bench.train_step_rows,
         "train_step_perlayer": kernel_bench.perlayer_rows,
+        "serve_decode_traffic": serve_bench.decode_traffic_rows,
         "table1_support": tables.table1_support,
         "table2_ppl": tables.table2_ppl,
         "table3_throughput": tables.table3_throughput,
@@ -47,7 +48,8 @@ def main(argv=None):
         "fig4_support_seeds": tables.fig4_support_seeds,
     }
     quick = {"table2_memory", "kernels", "train_step_fused",
-             "train_step_perlayer", "table3_throughput", "table5_inference"}
+             "train_step_perlayer", "serve_decode_traffic",
+             "table3_throughput", "table5_inference"}
 
     selected = list(all_benches)
     if args.only:

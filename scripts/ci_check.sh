@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # One-command regression gate: tier-1 tests + core smoke + a host-mesh
-# dry-run through the repro.dist spec engine + a paged serve smoke.
-# Run from anywhere.
+# dry-run through the repro.dist spec engine + paged serve smokes
+# (gathered-view and paged-attention-kernel decode). Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -43,5 +43,10 @@ python -m repro.launch.train --arch llama_60m --smoke --mode sltrain \
 echo "== serve smoke: paged KV engine, 3 staggered requests =="
 python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8 \
   --requests 3 --stagger --slots 2 --new-tokens 4 --max-len 64
+
+echo "== serve smoke: paged-attention kernel decode (interpret mode) =="
+python -m repro.launch.serve --arch llama_60m --smoke --paged \
+  --attn-kernel paged --block-len 8 --requests 3 --stagger --slots 2 \
+  --new-tokens 4 --max-len 64
 
 echo "ci_check: all gates passed"

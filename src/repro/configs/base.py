@@ -108,6 +108,15 @@ class ModelConfig:
     attn_pattern: Tuple[str, ...] = ()  # e.g. ("local","global"); empty = all global
     # QK-norm (qwen3)
     qk_norm: bool = False
+    # Decode-attention path over the paged KV cache (serve/kv.py):
+    #   "gather" — materialize the gathered (n_slots, view_len) per-slot
+    #              view, dense attention over it (the PR-2 baseline;
+    #              default until the paged kernel's parity gates bake in CI)
+    #   "paged"  — kernels/paged_attention.py streams K/V blocks through
+    #              VMEM with online softmax; the view never exists and
+    #              decode HBM K/V traffic tracks live tokens.
+    # Train/prefill and the contiguous (non-paged) cache ignore this.
+    attn_kernel: str = "gather"
     moe: MoEConfig = field(default_factory=MoEConfig)
     # MoE routing groups, aligned with the batch sharding (pod*data size at
     # scale, 1 on a single device). Group-local dispatch, DESIGN §4.
@@ -203,6 +212,20 @@ class ShardingConfig:
     pod_grad_compression: bool = False
     # shard KV cache sequence dim over the model axis for long-context decode
     seq_shard_decode: bool = False
+
+    def __post_init__(self):
+        if self.update_mode == "per_layer" and self.grad_accum > 1:
+            # fail at CONFIG time: letting this through would silently
+            # re-materialize the full gradient tree in the microbatch scan
+            # — exactly the O(P_trainable) residency per_layer exists to
+            # avoid (ROADMAP "per_layer × grad_accum"; the in-sweep
+            # accumulator has not landed yet)
+            raise ValueError(
+                "update_mode='per_layer' does not compose with "
+                f"grad_accum={self.grad_accum}: the microbatch scan would "
+                "re-materialize the full gradient tree the mode exists to "
+                "avoid. Keep grad_accum == 1 (raise global_batch instead) "
+                "until the in-sweep accumulator lands.")
 
 
 @dataclass(frozen=True)

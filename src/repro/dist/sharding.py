@@ -299,7 +299,8 @@ def opt_state_specs(opt_state, p_specs, mesh):
 
 def cache_specs(cache, mesh, batch_axes: Sequence[str] = BATCH_AXES,
                 *, model_axis: str = MODEL_AXIS,
-                seq_sharded: bool = False, paged: bool = False):
+                seq_sharded: bool = False, paged: bool = False,
+                attn_kernel: str = "gather"):
     """KV-cache specs.
 
     Contiguous layout (default): leaves are (..., batch, seq, heads,
@@ -311,10 +312,28 @@ def cache_specs(cache, mesh, batch_axes: Sequence[str] = BATCH_AXES,
     Paged layout (``paged=True``, serve/kv.py): leaves are pools
     (..., n_blocks, block_len, heads, head_dim) with no batch dim — every
     slot shares the pool through its block table. Heads shard over the
-    model axis (same TP attention layout as contiguous: the gathered
-    per-slot view inherits it); the block and block_len dims stay
-    replicated so any device can serve any slot's pages without cross-host
-    index traffic."""
+    model axis; the block and block_len dims stay replicated so any
+    device can serve any slot's pages without cross-host index traffic.
+    ``attn_kernel`` names the decode read path the layout must serve:
+
+    * ``"gather"`` — the gathered per-slot view inherits the head
+      sharding (XLA places the gather per shard);
+    * ``"paged"`` — kernels/paged_attention.py grids over the kv-head
+      dim, so the SAME head sharding makes each device stream only its
+      local heads' blocks; whole GQA q-head groups land with their kv
+      head automatically because the wq output sharding divides by the
+      identical model-axis factor. The kernel cannot split the sequence
+      (block) dims across devices, so ``seq_sharded=True`` is rejected
+      here rather than silently de-paging the pools at dispatch.
+
+    The two kernels deliberately share one layout: toggling
+    ``attn_kernel`` at serve time never resharded the cache."""
+    if paged and attn_kernel == "paged" and seq_sharded:
+        raise ValueError(
+            "attn_kernel='paged' cannot run seq-sharded: the kernel "
+            "streams whole K/V blocks per (slot, head) grid cell, so the "
+            "sequence/block dims must stay replicated — use the head-"
+            "sharded TP layout (default) or attn_kernel='gather'")
     axes = tuple(a for a in batch_axes if a in mesh.axis_names)
 
     def spec(leaf):

@@ -287,6 +287,38 @@ def adam8bit_update(p, g, m_codes, m_scales, v_codes, v_scales, *,
 
 
 # ---------------------------------------------------------------------------
+# Paged-attention decode (serve path: attend over KV block pools in place)
+# ---------------------------------------------------------------------------
+
+def paged_attention(q, k_pool, v_pool, block_table, positions, *,
+                    scale: float, softcap: float = 0.0, window: int = 0,
+                    interpret: bool | None = None):
+    """Decode attention directly over the paged K/V pools (serve/kv.py) —
+    the ``attn_kernel="paged"`` path of ``models/attention``.
+
+    q: (n_slots, H, hd) — ONE query token per slot, already rope'd; pools
+    (n_blocks, block_len, Hkv, hd); block_table (n_slots, blocks_per_slot)
+    int32; positions (n_slots,) int32 per-slot query positions. Handles
+    GQA by regrouping q to (n_slots, Hkv, H//Hkv, hd) so each kv head's
+    block stream serves its whole query group. Returns (n_slots, H, hd)
+    in q.dtype. Unlike the gather path this never materializes the
+    (n_slots, view_len) per-slot view: HBM K/V traffic is the slots' live
+    blocks, not n_slots × view_len.
+    """
+    from repro.kernels import paged_attention as pa_kernel
+    interp = INTERPRET if interpret is None else interpret
+    n_slots, n_heads, hd = q.shape
+    n_kv = k_pool.shape[2]
+    assert n_heads % n_kv == 0, (n_heads, n_kv)
+    q4 = q.reshape(n_slots, n_kv, n_heads // n_kv, hd)
+    out = pa_kernel.paged_attention(
+        q4, k_pool, v_pool, block_table.astype(jnp.int32),
+        positions.astype(jnp.int32), scale=scale, softcap=softcap,
+        window=window, interpret=interp)
+    return out.reshape(n_slots, n_heads, hd)
+
+
+# ---------------------------------------------------------------------------
 # Factored decode path (sparse-only kernel + small low-rank dots)
 # ---------------------------------------------------------------------------
 

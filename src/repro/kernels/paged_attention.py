@@ -1,0 +1,154 @@
+"""Paged-attention decode kernel: attend directly over KV block pools.
+
+The PR-2 paged serve path is correct but pays a per-layer gather: every
+decode step materializes a dense ``(n_slots, view_len, Hkv, hd)`` per-slot
+K/V view from the block pools before running dense attention over it, so
+decode HBM traffic and scratch scale with the worst-case ``view_len``, not
+with live tokens. This kernel is the vLLM-style fix: it reads K/V **blocks
+in place** and computes flash-style online-softmax attention while
+streaming them through VMEM — the gathered view never exists.
+
+Layout and grid
+---------------
+Pools are the serve/kv.py layout ``(n_blocks, block_len, Hkv, hd)`` with
+physical block 0 reserved as the null block; the per-slot block table
+``(n_slots, blocks_per_slot)`` and position vector ``(n_slots,)`` ride the
+**scalar-prefetch** channel (PrefetchScalarGridSpec), so each grid step's
+BlockSpec ``index_map`` resolves the slot's next physical block id before
+the body runs and Pallas double-buffers the block DMA like any other
+pipelined input. Grid is ``(n_slots, Hkv, blocks_per_slot)`` with the
+block dim innermost: one kernel instance owns one (slot, kv-head) pair and
+revisits its output block across the block sweep, carrying the online
+softmax state (m, l, acc) in VMEM scratch — the standard flash-decoding
+accumulator pattern.
+
+GQA is handled in-kernel: q arrives blocked as ``(slot, kv_head, group,
+head_dim)`` so the whole query-head group of a kv head shares that head's
+single K/V block fetch (the gather path re-reads the view once per q head
+group via broadcasting instead).
+
+Masking
+-------
+Both masks live inside the kernel, applied to scores AND to the value
+rows (a masked probability is exactly 0, but ``0 · NaN = NaN`` — zeroing v
+is what makes poisoned/garbage null-block rows unable to leak):
+
+* position: key position ``j·block_len + t`` must be ≤ the slot's query
+  position (decode writes the current token's K/V before attending, so
+  "≤" includes it); a sliding window adds ``pos - kpos < window``;
+* null block: a table entry of 0 (unallocated) masks the whole block.
+
+A slot with nothing valid (idle rows parked on the null block) outputs
+exact zeros instead of 0/0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # matches models/attention._attend's mask fill
+
+
+def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, block_len: int, scale: float,
+            softcap: float, window: int):
+    s = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    phys = tbl_ref[s, j]                       # physical block id (0 = null)
+    pos = pos_ref[s]                           # this slot's query position
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (group, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (block_len, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    kpos = j * block_len + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_len), 1)[0]                 # (block_len,)
+    valid = (kpos <= pos) & (phys != 0)
+    if window > 0:
+        valid &= (pos - kpos) < window
+
+    sc = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32)
+    if softcap > 0:
+        sc = jnp.tanh(sc / softcap) * softcap
+    sc = jnp.where(valid[None, :], sc, NEG_INF)          # (group, block_len)
+    v = jnp.where(valid[:, None], v, 0.0)
+
+    m_prev = m_ref[...]                                  # (group, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    # exp(NEG_INF - m) underflows to 0 only once a real score raised m;
+    # while everything so far is masked, sc == m_new == NEG_INF and the
+    # exp is 1 — the explicit where is what keeps masked weights at 0.
+    p = jnp.where(valid[None, :], jnp.exp(sc - m_new), 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = jnp.where(l > 0, acc_ref[...] / safe,
+                                0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "window",
+                                             "interpret"))
+def paged_attention(q, k_pool, v_pool, block_table, positions, *,
+                    scale: float, softcap: float = 0.0, window: int = 0,
+                    interpret: bool = True):
+    """Decode attention over paged pools, no gathered view.
+
+    q: (n_slots, Hkv, group, hd) — one query token per slot, already
+    rope'd/normed, grouped by kv head; k_pool/v_pool: (n_blocks,
+    block_len, Hkv, hd); block_table: (n_slots, blocks_per_slot) int32;
+    positions: (n_slots,) int32 per-slot query positions. Returns
+    (n_slots, Hkv, group, hd) in q.dtype (idle slots = exact zeros).
+    """
+    n_slots, n_kv, group, hd = q.shape
+    _, block_len, pool_kv, pool_hd = k_pool.shape
+    assert (pool_kv, pool_hd) == (n_kv, hd), (k_pool.shape, q.shape)
+    bps = block_table.shape[1]
+    assert block_table.shape == (n_slots, bps), block_table.shape
+    assert positions.shape == (n_slots,), positions.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_slots, n_kv, bps),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd),
+                         lambda s, h, j, tbl, pos: (s, h, 0, 0)),
+            # the paged read: the index_map resolves the slot's j-th
+            # LOGICAL block to its physical pool block before the body
+            # runs — this is the line that replaces kv.gather_view
+            pl.BlockSpec((1, block_len, 1, hd),
+                         lambda s, h, j, tbl, pos: (tbl[s, j], 0, h, 0)),
+            pl.BlockSpec((1, block_len, 1, hd),
+                         lambda s, h, j, tbl, pos: (tbl[s, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda s, h, j, tbl, pos: (s, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, hd), jnp.float32),   # acc
+            pltpu.VMEM((group, 1), jnp.float32),    # running max m
+            pltpu.VMEM((group, 1), jnp.float32),    # running sum l
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block_len=block_len, scale=scale,
+                          softcap=softcap, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_table, positions, q, k_pool, v_pool)

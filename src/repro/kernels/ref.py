@@ -51,3 +51,43 @@ def adam8bit_ref(p, g, m_codes, m_scales, v_codes, v_scales, scalars,
 def sl_decode_ref(x, B, A, rows, cols, v, scale: float):
     """Oracle for the factored decode path — same densified math."""
     return sl_matmul_ref(x, B, A, rows, cols, v, scale)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, positions, *,
+                        scale: float, softcap: float = 0.0,
+                        window: int = 0):
+    """Oracle for kernels/paged_attention: densify the per-slot view and
+    run masked softmax attention in f32. Same signature/semantics as the
+    kernel — null blocks (table entry 0) and positions past the slot's
+    query position are masked, masked probabilities are exactly 0, masked
+    v rows are zeroed (garbage/NaN cannot ride a 0-weight product), and a
+    slot with nothing valid (idle, parked on the null block) outputs 0.
+    Doubles as the CPU fallback the tests pin interpret mode against.
+
+    q: (n_slots, Hkv, group, hd); pools (n_blocks, block_len, Hkv, hd);
+    block_table (n_slots, blocks_per_slot) int32; positions (n_slots,).
+    """
+    n_slots, n_kv, group, hd = q.shape
+    block_len = k_pool.shape[1]
+    k = jnp.take(k_pool, block_table, axis=0)        # (S, bps, bl, Hkv, hd)
+    k = k.reshape(n_slots, -1, n_kv, hd).astype(jnp.float32)
+    v = jnp.take(v_pool, block_table, axis=0)
+    v = v.reshape(n_slots, -1, n_kv, hd).astype(jnp.float32)
+    view_len = k.shape[1]
+
+    kpos = jnp.arange(view_len, dtype=jnp.int32)
+    valid = (kpos[None, :] <= positions[:, None]) & \
+        jnp.repeat(block_table != 0, block_len, axis=1)
+    if window > 0:
+        valid &= (positions[:, None] - kpos[None, :]) < window
+
+    s = jnp.einsum("shgd,slhd->shgl", q.astype(jnp.float32) * scale, k)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    v = jnp.where(valid[:, None, :, None], v.swapaxes(1, 2), 0.0)  # (S,H,l,d)
+    o = jnp.einsum("shgl,shld->shgd", p, v) / jnp.where(l > 0, l, 1.0)
+    return jnp.where(l > 0, o, 0.0).astype(q.dtype)

@@ -6,6 +6,8 @@ Usage:
   python -m repro.launch.serve --arch llama_60m --smoke --sparse-decode
   python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8
   python -m repro.launch.serve --arch llama_60m --smoke --paged --stagger
+  python -m repro.launch.serve --arch llama_60m --smoke --paged \
+      --attn-kernel paged
 """
 from __future__ import annotations
 
@@ -35,6 +37,12 @@ def main(argv=None):
                          "per-slot decode positions (serve/kv.py)")
     ap.add_argument("--block-len", type=int, default=16,
                     help="tokens per KV block (paged only)")
+    ap.add_argument("--attn-kernel", default="gather",
+                    choices=("gather", "paged"),
+                    help="paged decode read path: 'gather' materializes "
+                         "the per-slot K/V view, 'paged' streams blocks "
+                         "through the Pallas paged-attention kernel "
+                         "(kernels/paged_attention.py; requires --paged)")
     ap.add_argument("--stagger", action="store_true",
                     help="submit requests one engine step apart (exercises "
                          "diverging per-slot positions)")
@@ -60,7 +68,8 @@ def main(argv=None):
     eng = ServeEngine(cfg, params, consts, n_slots=args.slots,
                       max_len=args.max_len,
                       sparse_decode=args.sparse_decode, mesh=mesh,
-                      paged=args.paged, block_len=args.block_len)
+                      paged=args.paged, block_len=args.block_len,
+                      attn_kernel=args.attn_kernel)
     rng = np.random.default_rng(0)
     prompts = []
     for i in range(args.requests):
@@ -82,7 +91,7 @@ def main(argv=None):
     assert len(stats["completed"]) == len(reqs) and not stats["exhausted"], \
         (len(stats["completed"]), stats["exhausted"])
     total_toks = sum(len(r.out) for r in reqs)
-    mode = "paged" if args.paged else "legacy"
+    mode = f"paged/{args.attn_kernel}" if args.paged else "legacy"
     print(f"served {len(reqs)} requests, {total_toks} tokens in {dt:.2f}s "
           f"({total_toks/dt:.1f} tok/s, {stats['decode_steps']} decode steps,"
           f" {eng.dispatches['prefill']} prefill dispatches, {mode},"

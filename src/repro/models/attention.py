@@ -113,9 +113,28 @@ def apply_attention(cfg: ModelConfig, params, consts, x, *, pos_offset=0,
     k/v at ``cache_index`` — a scalar (one shared write offset) or a (B,)
     vector (each slot writes at its own position) — and attends over the
     whole cache with per-slot causal masking. Paged layout (``block_table``
-    (B, blocks_per_slot) given): pools are (n_blocks, block_len, Hkv, hd);
-    writes scatter through the block table and reads attend the gathered
-    per-slot view (serve/kv.py).
+    (B, blocks_per_slot) given): pools are (n_blocks, block_len, Hkv, hd)
+    and writes scatter through the block table; how the READ runs is
+    ``cfg.attn_kernel``:
+
+    ==========  ==========================================================
+    attn_kernel paged decode read path
+    ==========  ==========================================================
+    "gather"    materialize the gathered (B, view_len, Hkv, hd) per-slot
+                view (``kv.gather_view``; null-block rows zeroed so
+                garbage cannot ride 0-weight products) and run the dense
+                ``_attend`` over it — HBM traffic O(B · view_len)/layer.
+    "paged"     ``kernels/ops.paged_attention``: Pallas kernel streams
+                K/V blocks through VMEM with online softmax (null blocks
+                and past-position entries masked in-kernel, GQA groups
+                broadcast in-kernel) — traffic O(live tokens)/layer. Used
+                when decoding (sq == 1) with a per-slot position vector;
+                other shapes (prefill, cross-attn) fall back to "gather".
+    ==========  ==========================================================
+
+    Both paths are value-equivalent within f32 attention tolerance
+    (tests/test_paged_attention.py pins the matrix); "gather" stays the
+    default until the parity gates have baked in CI.
 
     ``prefill=True`` runs the whole prompt train-style — attention over the
     just-computed local k/v (O(Sq²), chunked), not the S_max cache — while
@@ -161,8 +180,21 @@ def apply_attention(cfg: ModelConfig, params, consts, x, *, pos_offset=0,
             cv = kv_lib.scatter(cache["v"], block_table, positions, v)
             new_cache = {"k": ck, "v": cv}
             if not prefill:
+                if cfg.attn_kernel == "paged" and sq == 1 and per_slot:
+                    from repro.kernels import ops as kernel_ops
+                    scale = (cfg.query_pre_attn_scalar or hd) ** -0.5
+                    o = kernel_ops.paged_attention(
+                        q[:, 0], ck, cv, block_table, idx, scale=scale,
+                        softcap=cfg.attn_logit_softcap, window=window)
+                    return lin("wo", o.reshape(bsz, 1, nh * hd)), new_cache
                 k = kv_lib.gather_view(ck, block_table)
                 v = kv_lib.gather_view(cv, block_table)
+                # zero rows gathered from the null block: the causal mask
+                # makes their softmax weight exactly 0, but 0 · NaN = NaN —
+                # garbage in unallocated pages must not ride the p@v matmul
+                live = jnp.repeat(block_table != 0, ck.shape[1], axis=1)
+                k = jnp.where(live[:, :, None, None], k, 0)
+                v = jnp.where(live[:, :, None, None], v, 0)
                 k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
             else:
                 k_pos = jnp.arange(sq, dtype=jnp.int32) + idx

@@ -27,10 +27,14 @@ The paged layout makes KV *accounting* proportional to live tokens —
 blocks alloc/free as requests grow and finish, so the pool can be
 oversubscribed (``n_blocks`` below worst case) and backpressure/preempt
 instead of reserving ``n_slots × max_len`` per request. The DEFAULT pool
-is still allocated at full capacity up front, and the decode step
-materializes the gathered ``(n_slots, view_len)`` per-slot K/V view per
-layer as a transient, so peak decode memory matches the contiguous cache
-until a paged-attention kernel lands (see ROADMAP "Serving").
+is still allocated at full capacity up front. How decode READS the pools
+is ``attn_kernel``: ``"gather"`` (default) materializes the gathered
+``(n_slots, view_len)`` per-slot view per layer as a transient — peak
+decode memory matches the contiguous cache; ``"paged"`` routes through
+the Pallas paged-attention kernel (kernels/paged_attention.py) which
+streams K/V blocks through VMEM, so per-layer decode HBM traffic tracks
+live tokens instead of ``n_slots × view_len`` (the ``kv_traffic``
+counters model both; benchmarks/serve_bench.py reports them).
 """
 from __future__ import annotations
 
@@ -67,10 +71,20 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, consts, *, n_slots: int = 4,
                  max_len: int = 256, sparse_decode: bool = False, mesh=None,
-                 paged: bool = False, block_len: int = 16, n_blocks: int = 0):
+                 paged: bool = False, block_len: int = 16, n_blocks: int = 0,
+                 attn_kernel: Optional[str] = None):
         if sparse_decode and cfg.param.mode == "sltrain":
             cfg = dataclasses.replace(
                 cfg, param=dataclasses.replace(cfg.param, exec_mode="sparse"))
+        if attn_kernel is not None:
+            cfg = dataclasses.replace(cfg, attn_kernel=attn_kernel)
+        if cfg.attn_kernel not in ("gather", "paged"):
+            raise ValueError(f"attn_kernel {cfg.attn_kernel!r}: expected "
+                             "'gather' or 'paged'")
+        if cfg.attn_kernel == "paged" and not paged:
+            raise ValueError("attn_kernel='paged' requires the paged KV "
+                             "cache (paged=True): the kernel reads block "
+                             "pools, not the contiguous layout")
         self.cfg = cfg
         self.params, self.consts = params, consts
         self.api = registry.get_api(cfg)
@@ -101,7 +115,8 @@ class ServeEngine:
             self.consts = dist_sharding.place(self.consts, mesh)
             self.cache = dist_sharding.place(
                 self.cache, mesh,
-                dist_sharding.cache_specs(self.cache, mesh, paged=paged))
+                dist_sharding.cache_specs(self.cache, mesh, paged=paged,
+                                          attn_kernel=cfg.attn_kernel))
         self.pos = np.zeros(n_slots, dtype=np.int32)       # next position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.queue: List[Request] = []
@@ -113,6 +128,13 @@ class ServeEngine:
         # jit dispatch counters (benchmarks/serve_bench.py reads these to
         # show batched prefill is O(1) dispatches per admission batch)
         self.dispatches = {"prefill": 0, "decode": 0}
+        # per-decode-step KV-traffic model (paged engine): the gather path
+        # reads n_slots × view_len K/V rows per layer, the paged kernel
+        # reads each active slot's blocks. "live" counts attended
+        # positions (pos + 1), "resident" block-rounds them — serve_bench
+        # turns these into modeled HBM bytes for the two attn_kernel paths.
+        self.kv_traffic = {"steps": 0, "gather_tokens": 0, "live_tokens": 0,
+                           "resident_tokens": 0, "active_slots": 0}
 
     def _run(self, fn, *args):
         if self.mesh is None:
@@ -218,6 +240,13 @@ class ServeEngine:
         for s in active:
             tok[s, 0] = self.sched.slot_req[s].out[-1]
         pos_vec = self.sched.decode_positions()
+        t = self.kv_traffic
+        t["steps"] += 1
+        t["gather_tokens"] += self.n_slots * self.layout.view_len
+        t["live_tokens"] += sum(int(self.sched.pos[s]) + 1 for s in ready)
+        t["resident_tokens"] += sum(self.sched.blocks.alloc_tokens(s)
+                                    for s in ready)
+        t["active_slots"] += len(ready)
         self.dispatches["decode"] += 1
         nxt, _, self.cache = self._run(
             self._decode_fn, self.params, self.consts, jnp.asarray(tok),

@@ -118,6 +118,11 @@ class BlockTable:
     def blocks_in_use(self) -> int:
         return self.layout.n_blocks - 1 - len(self._free)
 
+    def alloc_tokens(self, slot: int) -> int:
+        """KV positions resident for ``slot`` (allocated blocks × block
+        length) — the block-rounded footprint the traffic model reads."""
+        return int(self._n_alloc[slot]) * self.layout.block_len
+
     def can_fit(self, n_tokens: int) -> bool:
         return blocks_for(n_tokens, self.layout.block_len) <= len(self._free)
 
