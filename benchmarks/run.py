@@ -4,16 +4,35 @@ Prints CSV rows ``name,us_per_call,derived``. Training-backed tables are
 scaled to CPU (smoke configs, synthetic C4); the memory tables use the
 paper's exact Appendix-F accounting at full model sizes.
 
+Each benchmark's rows are additionally snapshotted to a machine-readable
+``BENCH_<group>.json`` at the repo root (``--no-snapshots`` to skip), so
+the perf trajectory is diffable across PRs instead of living in
+CHANGES.md prose. Related benches share a group file (the two serve
+benches → BENCH_serve.json, the two train-step benches →
+BENCH_train_step.json); everything else snapshots under its own name.
+
   PYTHONPATH=src python -m benchmarks.run            # full (few minutes)
   PYTHONPATH=src python -m benchmarks.run --quick    # memory+kernels only
   PYTHONPATH=src python -m benchmarks.run --only table2_memory
+  PYTHONPATH=src python -m benchmarks.run --only serve_slo,serve_decode_traffic
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import sys
 import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# benches whose rows land in one shared snapshot file
+SNAPSHOT_GROUPS = {
+    "serve_decode_traffic": "serve",
+    "serve_slo": "serve",
+    "train_step_fused": "train_step",
+    "train_step_perlayer": "train_step",
+}
 
 
 def _emit(rows):
@@ -28,8 +47,11 @@ def _emit(rows):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--no-snapshots", action="store_true",
+                    help="skip writing BENCH_<group>.json snapshots")
     args = ap.parse_args(argv)
 
     from benchmarks import kernel_bench, serve_bench, tables
@@ -40,6 +62,7 @@ def main(argv=None):
         "train_step_fused": kernel_bench.train_step_rows,
         "train_step_perlayer": kernel_bench.perlayer_rows,
         "serve_decode_traffic": serve_bench.decode_traffic_rows,
+        "serve_slo": serve_bench.slo_rows,
         "table1_support": tables.table1_support,
         "table2_ppl": tables.table2_ppl,
         "table3_throughput": tables.table3_throughput,
@@ -48,23 +71,35 @@ def main(argv=None):
         "fig4_support_seeds": tables.fig4_support_seeds,
     }
     quick = {"table2_memory", "kernels", "train_step_fused",
-             "train_step_perlayer", "serve_decode_traffic",
+             "train_step_perlayer", "serve_decode_traffic", "serve_slo",
              "table3_throughput", "table5_inference"}
 
     selected = list(all_benches)
     if args.only:
-        selected = [args.only]
+        selected = args.only.split(",")
+        unknown = [n for n in selected if n not in all_benches]
+        if unknown:
+            ap.error(f"unknown bench(es) {unknown}; "
+                     f"known: {sorted(all_benches)}")
     elif args.quick:
         selected = [k for k in all_benches if k in quick]
 
     print("name,us_per_call,derived")
-    collected = []
+    collected, groups = [], {}
     for name in selected:
         t0 = time.time()
         rows = all_benches[name]()
         _emit(rows)
         collected += rows
+        groups.setdefault(SNAPSHOT_GROUPS.get(name, name), []).extend(rows)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if not args.no_snapshots:
+        for group, rows in groups.items():
+            path = REPO_ROOT / f"BENCH_{group}.json"
+            with open(path, "w") as f:
+                json.dump(rows, f, indent=1, default=str, sort_keys=True)
+                f.write("\n")
+            print(f"# snapshot: {path.name} ({len(rows)} rows)", flush=True)
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(collected, f, indent=1, default=str)

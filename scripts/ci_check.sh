@@ -49,4 +49,9 @@ python -m repro.launch.serve --arch llama_60m --smoke --paged \
   --attn-kernel paged --block-len 8 --requests 3 --stagger --slots 2 \
   --new-tokens 4 --max-len 64
 
+echo "== serve smoke: continuous batching + copy-on-write prefix sharing =="
+python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8 \
+  --stream --prefix-sharing --requests 4 --slots 2 --new-tokens 4 \
+  --max-len 64
+
 echo "ci_check: all gates passed"

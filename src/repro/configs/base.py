@@ -108,15 +108,20 @@ class ModelConfig:
     attn_pattern: Tuple[str, ...] = ()  # e.g. ("local","global"); empty = all global
     # QK-norm (qwen3)
     qk_norm: bool = False
-    # Decode-attention path over the paged KV cache (serve/kv.py):
+    # Attention read path over the paged KV cache (serve/kv.py):
     #   "gather" — materialize the gathered (n_slots, view_len) per-slot
-    #              view, dense attention over it (the PR-2 baseline;
-    #              default until the paged kernel's parity gates bake in CI)
+    #              view, dense attention over it (the PR-2 baseline; kept
+    #              selectable as the kernel's always-available oracle)
     #   "paged"  — kernels/paged_attention.py streams K/V blocks through
     #              VMEM with online softmax; the view never exists and
-    #              decode HBM K/V traffic tracks live tokens.
-    # Train/prefill and the contiguous (non-paged) cache ignore this.
-    attn_kernel: str = "gather"
+    #              decode HBM K/V traffic tracks live tokens. Per-slot
+    #              chunked prefill (shared-prefix suffixes) routes through
+    #              the sibling paged_prefill kernel the same way.
+    # Default is "paged" since the kernel/model/engine parity gates baked
+    # in CI (PR 5); a non-paged (contiguous-cache) engine silently falls
+    # back to "gather" — the kernel needs block pools. Train and the
+    # contiguous cache ignore this field.
+    attn_kernel: str = "paged"
     moe: MoEConfig = field(default_factory=MoEConfig)
     # MoE routing groups, aligned with the batch sharding (pod*data size at
     # scale, 1 on a single device). Group-local dispatch, DESIGN §4.

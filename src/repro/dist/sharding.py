@@ -300,7 +300,7 @@ def opt_state_specs(opt_state, p_specs, mesh):
 def cache_specs(cache, mesh, batch_axes: Sequence[str] = BATCH_AXES,
                 *, model_axis: str = MODEL_AXIS,
                 seq_sharded: bool = False, paged: bool = False,
-                attn_kernel: str = "gather"):
+                attn_kernel: str = "paged"):
     """KV-cache specs.
 
     Contiguous layout (default): leaves are (..., batch, seq, heads,
@@ -327,7 +327,12 @@ def cache_specs(cache, mesh, batch_axes: Sequence[str] = BATCH_AXES,
       here rather than silently de-paging the pools at dispatch.
 
     The two kernels deliberately share one layout: toggling
-    ``attn_kernel`` at serve time never resharded the cache."""
+    ``attn_kernel`` at serve time never resharded the cache. Copy-on-
+    write prefix sharing (serve/kv.py refcounts) composes for free: a
+    shared block is shared through the block TABLE (host-side int32), so
+    attaching it to more slots never moves pool bytes — the pools keep
+    this heads-over-model layout and every reader streams its local
+    heads' rows of the same physical block."""
     if paged and attn_kernel == "paged" and seq_sharded:
         raise ValueError(
             "attn_kernel='paged' cannot run seq-sharded: the kernel "

@@ -318,6 +318,34 @@ def paged_attention(q, k_pool, v_pool, block_table, positions, *,
     return out.reshape(n_slots, n_heads, hd)
 
 
+def paged_prefill_attention(q, k_pool, v_pool, block_table, offsets, *,
+                            scale: float, softcap: float = 0.0,
+                            window: int = 0,
+                            interpret: bool | None = None):
+    """Chunked-prefill attention over paged pools — the prefill sibling of
+    :func:`paged_attention` for ``attn_kernel="paged"``.
+
+    q: (n_slots, sq, H, hd) — each slot's SUFFIX chunk, rope'd at absolute
+    positions offsets[s] + [0, sq); the chunk's own K/V must already be
+    scattered into the pools (the kernel attends prior pages and the
+    chunk through one causal block sweep — shared-prefix pages are read
+    in place, never re-written). offsets: (n_slots,) int32 absolute
+    position of each slot's first chunk token. Returns (n_slots, sq, H,
+    hd) in q.dtype; padding rows / idle slots come back as exact zeros.
+    """
+    from repro.kernels import paged_attention as pa_kernel
+    interp = INTERPRET if interpret is None else interpret
+    n_slots, sq, n_heads, hd = q.shape
+    n_kv = k_pool.shape[2]
+    assert n_heads % n_kv == 0, (n_heads, n_kv)
+    q5 = q.reshape(n_slots, sq, n_kv, n_heads // n_kv, hd)
+    out = pa_kernel.paged_prefill(
+        q5, k_pool, v_pool, block_table.astype(jnp.int32),
+        offsets.astype(jnp.int32), scale=scale, softcap=softcap,
+        window=window, interpret=interp)
+    return out.reshape(n_slots, sq, n_heads, hd)
+
+
 # ---------------------------------------------------------------------------
 # Factored decode path (sparse-only kernel + small low-rank dots)
 # ---------------------------------------------------------------------------

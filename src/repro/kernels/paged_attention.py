@@ -1,4 +1,5 @@
-"""Paged-attention decode kernel: attend directly over KV block pools.
+"""Paged-attention kernels: attend directly over KV block pools, for
+single-token decode AND chunked prefill.
 
 The PR-2 paged serve path is correct but pays a per-layer gather: every
 decode step materializes a dense ``(n_slots, view_len, Hkv, hd)`` per-slot
@@ -40,6 +41,29 @@ is what makes poisoned/garbage null-block rows unable to leak):
 
 A slot with nothing valid (idle rows parked on the null block) outputs
 exact zeros instead of 0/0.
+
+Chunked prefill (:func:`paged_prefill`)
+---------------------------------------
+The decode kernel's sibling for ``sq > 1``: a slot's prompt SUFFIX chunk
+(its K/V already scattered into fresh pages) attends all prior pages in
+place — including pages attached read-only from another request's
+identical prompt prefix (serve/kv.py copy-on-write sharing) — plus
+causally within the chunk. Same grid family ``(n_slots, Hkv,
+blocks_per_slot)`` and scalar-prefetched block table, but the query block
+is the whole chunk ``(sq, group, hd)`` flattened to ``(sq·group, hd)``
+rows, the online-softmax state is carried per query ROW, and the
+causal/window masks are per (query row, key): query i at absolute
+position ``offset_s + i`` sees keys with ``kpos ≤ offset_s + i``. This is
+what makes prefix reuse free: without it, prefilling the non-shared
+suffix would first materialize a contiguous per-slot view (power-of-two
+bucket padding over the FULL prompt); with it, prefill reads exactly the
+resident pages and writes only the suffix.
+
+The value rows of a block are zeroed where NO query row attends them
+(null block, or wholly outside every query's window): a masked softmax
+weight is exactly 0, but ``0 · NaN = NaN``, and all-invalid columns are
+the only place garbage can be non-finite. Padding query rows (beyond a
+slot's real suffix) normalize over an empty set and output exact zeros.
 """
 from __future__ import annotations
 
@@ -152,3 +176,114 @@ def paged_attention(q, k_pool, v_pool, block_table, positions, *,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
     )(block_table, positions, q, k_pool, v_pool)
+
+
+def _prefill_kernel(tbl_ref, off_ref, q_ref, k_ref, v_ref, o_ref,
+                    acc_ref, m_ref, l_ref, *, block_len: int, sq: int,
+                    group: int, scale: float, softcap: float, window: int):
+    s = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    phys = tbl_ref[s, j]                       # physical block id (0 = null)
+    off = off_ref[s]                           # first chunk query's position
+    q = q_ref[0].astype(jnp.float32) * scale   # (sq, group, hd)
+    hd = q.shape[-1]
+    q2 = q.reshape(sq * group, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (block_len, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    kpos = j * block_len + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_len), 1)[0]                 # (block_len,)
+    # query row r of the flattened (sq·group) block sits at absolute
+    # position off + r // group (group-major flatten keeps a query's whole
+    # GQA head group on adjacent rows, sharing this block fetch)
+    qpos = off + jax.lax.broadcasted_iota(
+        jnp.int32, (sq, group), 0).reshape(sq * group, 1)
+    valid = (kpos[None, :] <= qpos) & (phys != 0)        # (sq·group, bl)
+    if window > 0:
+        valid &= (qpos - kpos[None, :]) < window
+
+    sc = jax.lax.dot(q2, k.T, preferred_element_type=jnp.float32)
+    if softcap > 0:
+        sc = jnp.tanh(sc / softcap) * softcap
+    sc = jnp.where(valid, sc, NEG_INF)
+    # zero v rows no query attends (the only rows that may hold non-finite
+    # garbage: the null block, or keys wholly outside every window) —
+    # columns valid for SOME row carry real finite K/V, and their masked
+    # rows contribute 0 · finite = 0
+    v = jnp.where(jnp.any(valid, axis=0)[:, None], v, 0.0)
+
+    m_prev = m_ref[...]                                  # (sq·group, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(sc - m_new), 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        out = jnp.where(l > 0, acc_ref[...] / safe, 0.0)
+        o_ref[0, :, 0] = out.reshape(sq, group, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "window",
+                                             "interpret"))
+def paged_prefill(q, k_pool, v_pool, block_table, offsets, *,
+                  scale: float, softcap: float = 0.0, window: int = 0,
+                  interpret: bool = True):
+    """Chunked-prefill attention over paged pools, no gathered view.
+
+    q: (n_slots, sq, Hkv, group, hd) — each slot's suffix chunk, already
+    rope'd/normed at absolute positions offsets[s] + [0, sq), grouped by
+    kv head; k_pool/v_pool: (n_blocks, block_len, Hkv, hd) with the
+    chunk's OWN K/V already scattered in (the kernel attends prior pages
+    AND the chunk through the same block sweep, causally); block_table:
+    (n_slots, blocks_per_slot) int32; offsets: (n_slots,) int32 absolute
+    position of each slot's first chunk query (the shared-prefix length).
+    Returns (n_slots, sq, Hkv, group, hd) in q.dtype; padding query rows
+    and idle slots come back as exact zeros.
+    """
+    n_slots, sq, n_kv, group, hd = q.shape
+    _, block_len, pool_kv, pool_hd = k_pool.shape
+    assert (pool_kv, pool_hd) == (n_kv, hd), (k_pool.shape, q.shape)
+    bps = block_table.shape[1]
+    assert block_table.shape == (n_slots, bps), block_table.shape
+    assert offsets.shape == (n_slots,), offsets.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_slots, n_kv, bps),
+        in_specs=[
+            pl.BlockSpec((1, sq, 1, group, hd),
+                         lambda s, h, j, tbl, off: (s, 0, h, 0, 0)),
+            pl.BlockSpec((1, block_len, 1, hd),
+                         lambda s, h, j, tbl, off: (tbl[s, j], 0, h, 0)),
+            pl.BlockSpec((1, block_len, 1, hd),
+                         lambda s, h, j, tbl, off: (tbl[s, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, sq, 1, group, hd),
+                               lambda s, h, j, tbl, off: (s, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((sq * group, hd), jnp.float32),   # acc
+            pltpu.VMEM((sq * group, 1), jnp.float32),    # running max m
+            pltpu.VMEM((sq * group, 1), jnp.float32),    # running sum l
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_prefill_kernel, block_len=block_len, sq=sq,
+                          group=group, scale=scale, softcap=softcap,
+                          window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_table, offsets, q, k_pool, v_pool)

@@ -91,3 +91,49 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, positions, *,
     v = jnp.where(valid[:, None, :, None], v.swapaxes(1, 2), 0.0)  # (S,H,l,d)
     o = jnp.einsum("shgl,shld->shgd", p, v) / jnp.where(l > 0, l, 1.0)
     return jnp.where(l > 0, o, 0.0).astype(q.dtype)
+
+
+def paged_prefill_ref(q, k_pool, v_pool, block_table, offsets, *,
+                      scale: float, softcap: float = 0.0, window: int = 0):
+    """Oracle for kernels/paged_attention.paged_prefill: densify each
+    slot's page view and run causal chunked-prefill attention in f32.
+    Query i of slot s sits at absolute position ``offsets[s] + i`` and
+    attends key positions ≤ its own (prior pages AND the chunk's earlier
+    tokens, which the caller has already scattered into the pools). Null
+    blocks are masked; fully-masked query rows (padding past the slot's
+    suffix, idle slots) output exact zeros.
+
+    q: (n_slots, sq, Hkv, group, hd); pools (n_blocks, block_len, Hkv, hd);
+    block_table (n_slots, blocks_per_slot) int32; offsets (n_slots,).
+    """
+    n_slots, sq, n_kv, group, hd = q.shape
+    block_len = k_pool.shape[1]
+    k = jnp.take(k_pool, block_table, axis=0)        # (S, bps, bl, Hkv, hd)
+    k = k.reshape(n_slots, -1, n_kv, hd).astype(jnp.float32)
+    v = jnp.take(v_pool, block_table, axis=0)
+    v = v.reshape(n_slots, -1, n_kv, hd).astype(jnp.float32)
+    view_len = k.shape[1]
+
+    kpos = jnp.arange(view_len, dtype=jnp.int32)
+    qpos = offsets[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    valid = (kpos[None, None, :] <= qpos[:, :, None]) & \
+        jnp.repeat(block_table != 0, block_len, axis=1)[:, None, :]
+    if window > 0:
+        valid &= (qpos[:, :, None] - kpos[None, None, :]) < window
+
+    s = jnp.einsum("sqhgd,slhd->sqhgl", q.astype(jnp.float32) * scale, k)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = valid[:, :, None, None, :]                # (S, sq, 1, 1, l)
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    # zero v where NO query of the slot attends (null blocks / NaN guard)
+    vmask = jnp.any(valid, axis=1)                   # (S, l)
+    v = jnp.where(vmask[:, :, None, None, None], v[:, :, :, None, :],
+                  0.0)                               # (S, l, H, 1, d)
+    o = jnp.einsum("sqhgl,slhgd->sqhgd",
+                   p, jnp.broadcast_to(v, v.shape[:3] + (group, hd)))
+    o = o / jnp.where(l > 0, l, 1.0)
+    return jnp.where(l > 0, o, 0.0).astype(q.dtype)

@@ -8,6 +8,8 @@ Usage:
   python -m repro.launch.serve --arch llama_60m --smoke --paged --stagger
   python -m repro.launch.serve --arch llama_60m --smoke --paged \
       --attn-kernel paged
+  python -m repro.launch.serve --arch llama_60m --smoke --paged \
+      --stream --prefix-sharing
 """
 from __future__ import annotations
 
@@ -37,15 +39,27 @@ def main(argv=None):
                          "per-slot decode positions (serve/kv.py)")
     ap.add_argument("--block-len", type=int, default=16,
                     help="tokens per KV block (paged only)")
-    ap.add_argument("--attn-kernel", default="gather",
+    ap.add_argument("--attn-kernel", default=None,
                     choices=("gather", "paged"),
-                    help="paged decode read path: 'gather' materializes "
+                    help="paged attention read path: 'gather' materializes "
                          "the per-slot K/V view, 'paged' streams blocks "
-                         "through the Pallas paged-attention kernel "
-                         "(kernels/paged_attention.py; requires --paged)")
+                         "through the Pallas paged-attention kernels "
+                         "(kernels/paged_attention.py; requires --paged). "
+                         "Default: the config's choice ('paged' on a paged "
+                         "engine, auto-fallback to 'gather' otherwise)")
     ap.add_argument("--stagger", action="store_true",
                     help="submit requests one engine step apart (exercises "
                          "diverging per-slot positions)")
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous batching: stamp Poisson arrival ticks "
+                         "on the requests and serve via run_stream — "
+                         "admission happens inside the decode loop "
+                         "(requires --paged)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="copy-on-write prefix sharing: admissions whose "
+                         "prompt matches a resident block-aligned prefix "
+                         "attach those pages read-only and prefill only "
+                         "the suffix (requires --paged)")
     ap.add_argument("--use-mesh", action="store_true",
                     help="place weights/cache via repro.dist.sharding on "
                          "the named local mesh")
@@ -65,37 +79,61 @@ def main(argv=None):
     if args.use_mesh:
         from repro.dist import sharding as dist_sharding
         mesh = dist_sharding.make_local_mesh()
+    if (args.stream or args.prefix_sharing) and not args.paged:
+        ap.error("--stream/--prefix-sharing require --paged")
     eng = ServeEngine(cfg, params, consts, n_slots=args.slots,
                       max_len=args.max_len,
                       sparse_decode=args.sparse_decode, mesh=mesh,
                       paged=args.paged, block_len=args.block_len,
-                      attn_kernel=args.attn_kernel)
+                      attn_kernel=args.attn_kernel,
+                      prefix_sharing=args.prefix_sharing)
     rng = np.random.default_rng(0)
     prompts = []
+    shared = rng.integers(3, cfg.vocab_size, size=16).tolist()
     for i in range(args.requests):
         plen = int(rng.integers(2, 8))
-        prompts.append(rng.integers(3, cfg.vocab_size, size=plen).tolist())
+        tail = rng.integers(3, cfg.vocab_size, size=plen).tolist()
+        # with sharing on, give the workload something to share: half the
+        # prompts open with one common (block-alignable) system prefix
+        prompts.append(shared + tail if args.prefix_sharing and i % 2 == 0
+                       else tail)
     t0 = time.perf_counter()
     reqs = []
-    if args.stagger:
-        it = iter(prompts)
-        reqs.append(eng.submit(next(it), max_new_tokens=args.new_tokens))
-        for p in it:
-            eng.step()
-            reqs.append(eng.submit(p, max_new_tokens=args.new_tokens))
+    if args.stream:
+        arrivals = np.cumsum(rng.poisson(2.0, size=len(prompts)))
+        reqs = [eng.submit(p, max_new_tokens=args.new_tokens, arrival=int(a))
+                for p, a in zip(prompts, arrivals)]
+        stats = eng.run_stream()
     else:
-        reqs = [eng.submit(p, max_new_tokens=args.new_tokens)
-                for p in prompts]
-    stats = eng.run_until_drained()
+        if args.stagger:
+            it = iter(prompts)
+            reqs.append(eng.submit(next(it), max_new_tokens=args.new_tokens))
+            for p in it:
+                eng.step()
+                reqs.append(eng.submit(p, max_new_tokens=args.new_tokens))
+        else:
+            reqs = [eng.submit(p, max_new_tokens=args.new_tokens)
+                    for p in prompts]
+        stats = eng.run_until_drained()
     dt = time.perf_counter() - t0
     assert len(stats["completed"]) == len(reqs) and not stats["exhausted"], \
         (len(stats["completed"]), stats["exhausted"])
     total_toks = sum(len(r.out) for r in reqs)
-    mode = f"paged/{args.attn_kernel}" if args.paged else "legacy"
+    mode = f"paged/{eng.cfg.attn_kernel}" if args.paged else "legacy"
+    if args.stream:
+        mode += "/stream"
     print(f"served {len(reqs)} requests, {total_toks} tokens in {dt:.2f}s "
           f"({total_toks/dt:.1f} tok/s, {stats['decode_steps']} decode steps,"
           f" {eng.dispatches['prefill']} prefill dispatches, {mode},"
           f" sparse_decode={args.sparse_decode})")
+    if args.prefix_sharing:
+        pt = eng.prefill_traffic
+        print(f"  prefix sharing: {pt['tokens_shared']}/{pt['tokens_total']} "
+              "prompt tokens attached from resident pages (never "
+              "recomputed or rewritten)")
+    if args.stream:
+        tt = sorted(r.t_first - r.arrival for r in reqs)
+        print(f"  TTFT ticks: p50={tt[len(tt)//2]} max={tt[-1]}")
     for r in reqs[:4]:
         print(f"  req {r.uid}: prompt {r.prompt} -> {r.out}")
 

@@ -129,12 +129,18 @@ def apply_attention(cfg: ModelConfig, params, consts, x, *, pos_offset=0,
                 and past-position entries masked in-kernel, GQA groups
                 broadcast in-kernel) — traffic O(live tokens)/layer. Used
                 when decoding (sq == 1) with a per-slot position vector;
-                other shapes (prefill, cross-attn) fall back to "gather".
+                per-slot chunked prefill (sq > 1 at per-slot offsets)
+                dispatches the sibling ``paged_prefill_attention`` kernel
+                (causal within the chunk, prior pages attended in place);
+                remaining shapes (scalar-offset prefill, cross-attn) fall
+                back to "gather".
     ==========  ==========================================================
 
     Both paths are value-equivalent within f32 attention tolerance
-    (tests/test_paged_attention.py pins the matrix); "gather" stays the
-    default until the parity gates have baked in CI.
+    (tests/test_paged_attention.py pins the matrix); "paged" is the
+    default since the parity gates baked in CI ("gather" stays
+    selectable, and is the automatic fallback whenever the cache is not
+    paged).
 
     ``prefill=True`` runs the whole prompt train-style — attention over the
     just-computed local k/v (O(Sq²), chunked), not the S_max cache — while
@@ -192,6 +198,26 @@ def apply_attention(cfg: ModelConfig, params, consts, x, *, pos_offset=0,
                 # zero rows gathered from the null block: the causal mask
                 # makes their softmax weight exactly 0, but 0 · NaN = NaN —
                 # garbage in unallocated pages must not ride the p@v matmul
+                live = jnp.repeat(block_table != 0, ck.shape[1], axis=1)
+                k = jnp.where(live[:, :, None, None], k, 0)
+                v = jnp.where(live[:, :, None, None], v, 0)
+                k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+            elif per_slot:
+                # chunked (suffix) prefill: slot s's queries sit at absolute
+                # positions idx[s] + [0, sq) and must attend the PRIOR pages
+                # (e.g. an attached shared prefix) as well as the chunk
+                # itself — local-k attention is wrong whenever idx[s] > 0.
+                # The chunk's own k/v was just scattered, so both read
+                # paths see it through the pools.
+                if cfg.attn_kernel == "paged":
+                    from repro.kernels import ops as kernel_ops
+                    scale = (cfg.query_pre_attn_scalar or hd) ** -0.5
+                    o = kernel_ops.paged_prefill_attention(
+                        q, ck, cv, block_table, idx, scale=scale,
+                        softcap=cfg.attn_logit_softcap, window=window)
+                    return lin("wo", o.reshape(bsz, sq, nh * hd)), new_cache
+                k = kv_lib.gather_view(ck, block_table)
+                v = kv_lib.gather_view(cv, block_table)
                 live = jnp.repeat(block_table != 0, ck.shape[1], axis=1)
                 k = jnp.where(live[:, :, None, None], k, 0)
                 v = jnp.where(live[:, :, None, None], v, 0)

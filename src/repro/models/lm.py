@@ -374,7 +374,7 @@ def decode_step(cfg: ModelConfig, params, consts, tokens, cache, index,
 
 
 def prefill_step(cfg: ModelConfig, params, consts, tokens, cache,
-                 *, block_table=None):
+                 *, block_table=None, offsets=None):
     """Batched prefill: run the whole prompt batch (B, S) through the
     train-style chunked-attention forward ONCE, writing K/V for positions
     [0, S) into the cache as each layer computes them. Returns
@@ -385,6 +385,14 @@ def prefill_step(cfg: ModelConfig, params, consts, tokens, cache,
     that must not be written (slots mid-decode in the same batch) are
     protected by nulling their table rows — see serve/kv.py. Without a
     block table the contiguous cache is written on EVERY row, so only call
-    it when the whole batch is fresh."""
-    return _cached_forward(cfg, params, consts, tokens, cache, jnp.int32(0),
+    it when the whole batch is fresh.
+
+    ``offsets`` (B,) int32 (paged only) switches to chunked SUFFIX
+    prefill: row s's tokens sit at absolute positions offsets[s] + [0, S)
+    and attend the slot's PRIOR pages in place — the shared-prefix path,
+    where an admission that attached resident prefix blocks read-only
+    prefills only the divergent suffix. logits[s, suffix_len_s - 1] then
+    scores the first generated token."""
+    index = jnp.int32(0) if offsets is None else offsets.astype(jnp.int32)
+    return _cached_forward(cfg, params, consts, tokens, cache, index,
                            block_table, prefill=True)

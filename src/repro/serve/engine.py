@@ -1,5 +1,17 @@
 """Serving engine: continuous batching over fixed slots, with a paged KV
-cache, batched prefill, and per-slot decode positions.
+cache, copy-on-write prefix sharing, batched (suffix-)prefill, and
+per-slot decode positions.
+
+Two run loops: :meth:`ServeEngine.run_until_drained` (drain-style — admit
+whatever is queued, run to empty; the PR-2 entry point) and
+:meth:`ServeEngine.run_stream` (continuous batching — requests carry
+arrival tick stamps, admission happens inside the decode loop as slots
+free up, TTFT is measured on the engine's dispatch clock). With
+``prefix_sharing=True`` an admission whose prompt matches a resident
+block-aligned prefix attaches those pages read-only (refcount++) and
+prefills only the divergent suffix through the chunked paged-prefill
+path — prefill FLOPs and K/V writes for an N-way shared prefix drop
+N× → 1× (``prefill_traffic`` counts the split).
 
 Two cache layouts share the engine API:
 
@@ -28,12 +40,13 @@ blocks alloc/free as requests grow and finish, so the pool can be
 oversubscribed (``n_blocks`` below worst case) and backpressure/preempt
 instead of reserving ``n_slots × max_len`` per request. The DEFAULT pool
 is still allocated at full capacity up front. How decode READS the pools
-is ``attn_kernel``: ``"gather"`` (default) materializes the gathered
-``(n_slots, view_len)`` per-slot view per layer as a transient — peak
-decode memory matches the contiguous cache; ``"paged"`` routes through
-the Pallas paged-attention kernel (kernels/paged_attention.py) which
-streams K/V blocks through VMEM, so per-layer decode HBM traffic tracks
-live tokens instead of ``n_slots × view_len`` (the ``kv_traffic``
+is ``attn_kernel``: ``"gather"`` materializes the gathered ``(n_slots,
+view_len)`` per-slot view per layer as a transient — peak decode memory
+matches the contiguous cache; ``"paged"`` (the config default on a paged
+engine — a non-paged engine silently downgrades to "gather") routes
+through the Pallas paged-attention kernels (kernels/paged_attention.py)
+which stream K/V blocks through VMEM, so per-layer decode HBM traffic
+tracks live tokens instead of ``n_slots × view_len`` (the ``kv_traffic``
 counters model both; benchmarks/serve_bench.py reports them).
 """
 from __future__ import annotations
@@ -66,13 +79,20 @@ class Request:
     resume: Optional[List[int]] = None
     stalls: int = 0
     _progress_mark: int = -1
+    # stream timing, in engine clock ticks (= jit dispatches, the
+    # deterministic unit of serving work): when the request arrives, when
+    # its first token lands, when it completes. TTFT = t_first - arrival.
+    arrival: int = 0
+    t_first: Optional[int] = None
+    t_done: Optional[int] = None
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, consts, *, n_slots: int = 4,
                  max_len: int = 256, sparse_decode: bool = False, mesh=None,
                  paged: bool = False, block_len: int = 16, n_blocks: int = 0,
-                 attn_kernel: Optional[str] = None):
+                 attn_kernel: Optional[str] = None,
+                 prefix_sharing: bool = False):
         if sparse_decode and cfg.param.mode == "sltrain":
             cfg = dataclasses.replace(
                 cfg, param=dataclasses.replace(cfg.param, exec_mode="sparse"))
@@ -82,9 +102,18 @@ class ServeEngine:
             raise ValueError(f"attn_kernel {cfg.attn_kernel!r}: expected "
                              "'gather' or 'paged'")
         if cfg.attn_kernel == "paged" and not paged:
-            raise ValueError("attn_kernel='paged' requires the paged KV "
-                             "cache (paged=True): the kernel reads block "
-                             "pools, not the contiguous layout")
+            if attn_kernel is not None:
+                raise ValueError("attn_kernel='paged' requires the paged KV "
+                                 "cache (paged=True): the kernel reads block "
+                                 "pools, not the contiguous layout")
+            # the config DEFAULT is "paged"; a contiguous-cache engine has
+            # no block pools to stream, so fall back to the gather read
+            # path rather than rejecting every default-config legacy engine
+            cfg = dataclasses.replace(cfg, attn_kernel="gather")
+        if prefix_sharing and not paged:
+            raise ValueError("prefix_sharing requires the paged KV cache "
+                             "(paged=True): sharing attaches block-table "
+                             "entries, which the contiguous layout lacks")
         self.cfg = cfg
         self.params, self.consts = params, consts
         self.api = registry.get_api(cfg)
@@ -100,7 +129,8 @@ class ServeEngine:
             self.cache = self.api.init_cache(cfg, n_slots, max_len,
                                              paged=True, block_len=block_len,
                                              n_blocks=layout.n_blocks)
-            self.sched = Scheduler(n_slots, max_len, layout)
+            self.sched = Scheduler(n_slots, max_len, layout,
+                                   prefix_sharing=prefix_sharing)
             self._prefill_fn = jax.jit(step_lib.make_prefill_step(cfg, self.api))
         else:
             self.cache = self.api.init_cache(cfg, n_slots, max_len)
@@ -117,6 +147,7 @@ class ServeEngine:
                 self.cache, mesh,
                 dist_sharding.cache_specs(self.cache, mesh, paged=paged,
                                           attn_kernel=cfg.attn_kernel))
+        self.prefix_sharing = prefix_sharing
         self.pos = np.zeros(n_slots, dtype=np.int32)       # next position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.queue: List[Request] = []
@@ -125,9 +156,20 @@ class ServeEngine:
         self._uid = 0
         self._decode_fn = jax.jit(step_lib.make_serve_step(cfg, self.api))
         self._steps = 0
+        # engine clock, in jit dispatches (prefill or decode, each += 1):
+        # the deterministic time base for arrivals and TTFT. Per-token
+        # legacy prefill burns len(prompt) ticks where the batched paged
+        # prefill burns 1 — exactly the dispatch economics being measured.
+        self.clock = 0
         # jit dispatch counters (benchmarks/serve_bench.py reads these to
         # show batched prefill is O(1) dispatches per admission batch)
         self.dispatches = {"prefill": 0, "decode": 0}
+        # prefill token traffic (paged engine): "shared" counts prompt
+        # tokens whose K/V came from attaching resident prefix blocks —
+        # never recomputed, never rewritten. serve_bench turns the split
+        # into modeled prefill HBM bytes saved by copy-on-write sharing.
+        self.prefill_traffic = {"tokens_total": 0, "tokens_prefilled": 0,
+                                "tokens_shared": 0}
         # per-decode-step KV-traffic model (paged engine): the gather path
         # reads n_slots × view_len K/V rows per layer, the paged kernel
         # reads each active slot's blocks. "live" counts attended
@@ -143,9 +185,16 @@ class ServeEngine:
             return fn(*args)
 
     # -- API --------------------------------------------------------------------
-    def submit(self, prompt: List[int], max_new_tokens: int = 16) -> Request:
+    def submit(self, prompt: List[int], max_new_tokens: int = 16,
+               arrival: Optional[int] = None) -> Request:
         """Queue a request. Invalid prompts are rejected HERE so a bad
-        request can never wedge the engine from inside step()."""
+        request can never wedge the engine from inside step().
+
+        ``arrival`` (clock ticks) timestamps when the request becomes
+        visible to the stream loop — :meth:`run_stream` will not admit it
+        before then (and fast-forwards an idle engine's clock to it). The
+        default 0 means "already arrived", which is what the drain-style
+        entry points assume."""
         if not prompt:
             raise ValueError("empty prompt")
         if len(prompt) >= self.max_len:
@@ -162,7 +211,8 @@ class ServeEngine:
                     f"prompt needs {need} blocks but the pool only has "
                     f"{usable}: raise n_blocks or shorten the prompt")
         self._uid += 1
-        req = Request(self._uid, list(prompt), max_new_tokens)
+        req = Request(self._uid, list(prompt), max_new_tokens,
+                      arrival=int(arrival or 0))
         if self.paged:
             self.sched.submit(req)
         else:
@@ -171,30 +221,47 @@ class ServeEngine:
 
     def _complete(self, req: Request) -> None:
         req.done = True
+        req.t_done = self.clock
         self.completed.append(req)
 
     # -- paged path ---------------------------------------------------------
-    def _admit_paged(self) -> None:
+    def _admit_paged(self, now: Optional[int] = None) -> None:
         """Admit queued requests and run ONE batched prefill over them.
         While any active slot is parked for blocks, admission pauses so
         freed blocks reach the parked slots first (otherwise an evicted
-        request could readmit into them and starve the parked slot)."""
+        request could readmit into them and starve the parked slot).
+        ``now`` (the stream loop's clock) gates admission on arrival;
+        None (drain-style entry points) admits anything queued."""
         if self._parked and self.sched.active_slots:
             return
-        admitted = self.sched.admit()
+        admitted = self.sched.admit(now)
         if not admitted:
             return
-        tokens, lengths, table = self.sched.build_prefill(admitted)
+        tokens, lengths, offsets, table = self.sched.build_prefill(admitted)
+        pt = self.prefill_traffic
+        for s, req in admitted:
+            n = len(req.prompt if req.resume is None else req.resume)
+            pt["tokens_total"] += n
+            pt["tokens_prefilled"] += n - int(offsets[s])
+            pt["tokens_shared"] += int(offsets[s])
         self.dispatches["prefill"] += 1
-        first, _, self.cache = self._run(
-            self._prefill_fn, self.params, self.consts, jnp.asarray(tokens),
-            self.cache, jnp.asarray(lengths), jnp.asarray(table))
+        self.clock += 1
+        args = (self.params, self.consts, jnp.asarray(tokens), self.cache,
+                jnp.asarray(lengths), jnp.asarray(table))
+        if self.prefix_sharing:
+            # per-slot offsets switch prefill to the chunked-suffix path
+            # (attends attached prefix pages in place); without sharing the
+            # offsets are identically 0 and the legacy whole-prompt trace
+            # is kept — no recompile, no behavior change
+            args += (None, jnp.asarray(offsets))
+        first, _, self.cache = self._run(self._prefill_fn, *args)
         first = np.asarray(first)
         self.sched.finish_prefill(admitted)
         for s, req in admitted:
             tok = int(first[s, 0])
             if req.resume is None:
                 req.out = [tok]
+                req.t_first = self.clock
             else:
                 # recompute after preemption: the re-prefilled context is
                 # prompt + out, so this sample regenerates the token the
@@ -224,8 +291,8 @@ class ServeEngine:
                 "progress: the pool cannot hold the working set — raise "
                 "n_blocks or lower n_slots/max_len")
 
-    def _step_paged(self) -> int:
-        self._admit_paged()
+    def _step_paged(self, now: Optional[int] = None) -> int:
+        self._admit_paged(now)
         active = self.sched.active_slots
         if not active:
             return 0
@@ -248,6 +315,7 @@ class ServeEngine:
                                     for s in ready)
         t["active_slots"] += len(ready)
         self.dispatches["decode"] += 1
+        self.clock += 1
         nxt, _, self.cache = self._run(
             self._decode_fn, self.params, self.consts, jnp.asarray(tok),
             self.cache, jnp.asarray(pos_vec),
@@ -277,11 +345,13 @@ class ServeEngine:
             tok = np.zeros((self.n_slots, 1), np.int32)
             tok[slot, 0] = t
             self.dispatches["prefill"] += 1
+            self.clock += 1
             nxt, _, self.cache = self._run(
                 self._decode_fn, self.params, self.consts, jnp.asarray(tok),
                 self.cache, jnp.int32(self.pos[slot]))
             self.pos[slot] += 1
         req.out = [int(np.asarray(nxt)[slot, 0])]
+        req.t_first = self.clock
 
     def _refill(self) -> None:
         for s in range(self.n_slots):
@@ -308,6 +378,7 @@ class ServeEngine:
         # per-slot index vector removes).
         idx = int(max(self.pos[s] for s in active))
         self.dispatches["decode"] += 1
+        self.clock += 1
         nxt, _, self.cache = self._run(
             self._decode_fn, self.params, self.consts, jnp.asarray(tok),
             self.cache, jnp.int32(idx))
@@ -333,21 +404,68 @@ class ServeEngine:
             return self.sched.has_work
         return bool(self.queue) or any(r is not None for r in self.slot_req)
 
+    def _unfinished(self) -> List[Request]:
+        """Requests still queued or mid-decode — what a bounded run loop
+        left behind. Both run loops surface this in their return dict so
+        callers can retry/report instead of losing requests to a log
+        message."""
+        if self.paged:
+            active = [self.sched.slot_req[s] for s in self.sched.active_slots]
+            return active + list(self.sched.queue)
+        return [r for r in self.slot_req if r is not None] + list(self.queue)
+
     def run_until_drained(self, max_steps: int = 10_000) -> Dict[str, Any]:
         """Step until every request finished (or ``max_steps`` ran out).
 
-        Returns {"decode_steps": int, "completed": [Request, ...],
-        "exhausted": bool} — ``exhausted`` is True when max_steps was used
-        up with requests still queued or mid-decode."""
+        Drain-style entry point: arrival timestamps are IGNORED — whatever
+        is queued is admissible immediately (the caller decided to drain
+        it). Returns {"decode_steps": int, "completed": [Request, ...],
+        "unfinished": [Request, ...], "exhausted": bool} — ``exhausted``
+        is True when max_steps was used up with requests still queued or
+        mid-decode, and ``unfinished`` holds exactly those requests."""
         for _ in range(max_steps):
             if not self._has_work():
                 break
             self.step()
-        exhausted = self._has_work()
-        if exhausted:
+        unfinished = self._unfinished()
+        if unfinished:
             import warnings
             warnings.warn(f"run_until_drained: max_steps={max_steps} "
-                          "exhausted with work still queued")
+                          f"exhausted with {len(unfinished)} requests still "
+                          "queued or mid-decode (see the 'unfinished' list)")
         return {"decode_steps": self._steps,
                 "completed": list(self.completed),
-                "exhausted": exhausted}
+                "unfinished": unfinished,
+                "exhausted": bool(unfinished)}
+
+    def run_stream(self, max_steps: int = 100_000) -> Dict[str, Any]:
+        """Continuous batching: admission happens INSIDE the decode loop.
+
+        Every iteration admits queued requests whose ``arrival`` ≤ clock
+        into freed slots (one batched suffix-prefill dispatch), then runs
+        one batched decode step over all active slots — a request arriving
+        mid-flight starts decoding next step, without waiting for the
+        current set to drain. When every slot is idle the clock
+        fast-forwards to the next arrival instead of spinning. Requires
+        the paged engine (slot recycling + per-slot positions).
+
+        Returns the same dict shape as :meth:`run_until_drained`;
+        completed requests carry ``arrival``/``t_first``/``t_done`` tick
+        stamps for TTFT accounting (benchmarks/serve_bench.py)."""
+        if not self.paged:
+            raise ValueError("run_stream requires the paged engine "
+                             "(paged=True): continuous admission recycles "
+                             "slots through the block-table scheduler")
+        for _ in range(max_steps):
+            if not self._has_work():
+                break
+            if not self.sched.active_slots:
+                nxt = self.sched.next_arrival()
+                if nxt is not None and nxt > self.clock:
+                    self.clock = nxt      # idle engine: jump to next arrival
+            self._step_paged(now=self.clock)
+        unfinished = self._unfinished()
+        return {"decode_steps": self._steps,
+                "completed": list(self.completed),
+                "unfinished": unfinished,
+                "exhausted": bool(unfinished)}

@@ -1,4 +1,5 @@
-"""Block-paged KV cache: pool, block table, and jit gather/scatter.
+"""Block-paged KV cache: pool, block table, refcounted copy-on-write
+prefix sharing, and jit gather/scatter.
 
 The contiguous cache reserves ``n_slots × max_len`` KV rows per layer up
 front; short requests waste most of it. The paged layout instead keeps a
@@ -17,16 +18,32 @@ attended to — positions beyond a slot's length are causally masked, and
 real writes always precede the first read of their position. This keeps
 the jit'd gather/scatter free of bounds logic.
 
+**Prefix sharing (copy-on-write)**: K/V at position i is a pure function
+of the token prefix tokens[:i+1] (and the params), so two requests whose
+prompts agree on a block-aligned prefix can map those logical blocks to
+the SAME physical blocks. Every physical block carries a refcount; a
+block-chain hash map (``register_prefix``) records which resident block
+holds each (prefix-of-full-blocks) so a later admission can
+``match_prefix``/``attach`` them — refcount++ instead of re-prefilling.
+Shared blocks are read-only by construction: sharing is always a strict
+block-aligned PREFIX of the prompt, suffix prefill and decode only ever
+write at positions ≥ the shared length, and growth appends fresh blocks.
+``release`` decrements refcounts and returns a block to the free list
+only at zero (never a double-free; the refcount property test pins the
+accounting). Prefill FLOPs and K/V pool writes for an N-way shared
+prefix drop N× → 1×.
+
 Device-side helpers (:func:`gather_view`, :func:`scatter`) are pure jnp
 gathers/scatters usable inside jit/scan; host-side allocation lives in
 :class:`BlockTable`. The model never sees paging — attention receives the
-gathered ``(n_slots, blocks_per_slot · block_len, H, hd)`` view, which is
-exactly the contiguous layout with ``max_len = blocks_per_slot·block_len``.
+gathered ``(n_slots, blocks_per_slot · block_len, H, hd)`` view (or, with
+``attn_kernel="paged"``, streams the pools in place), which is exactly
+the contiguous layout with ``max_len = blocks_per_slot·block_len``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -81,8 +98,15 @@ def scatter(pool, table, positions, new):
     pool: (n_blocks, block_len, H, hd); table: (n_slots, blocks_per_slot);
     positions: (n_slots, S) int32 logical positions; new: (n_slots, S, H,
     hd). Returns the updated pool. Positions mapping to unallocated table
-    entries land in the null block (duplicate writes there are benign)."""
+    entries land in the null block (duplicate writes there are benign).
+    Positions are clamped to the table width explicitly — an offset
+    prefill's padding rows (offset + bucket can exceed view_len) must
+    never rest on out-of-bounds gather semantics. Clamped garbage lands
+    at the slot's LAST logical block, which a block-aligned shared prefix
+    can never own (sharing is capped below the prompt end) and which
+    decode overwrites before the position is first attended."""
     bl = pool.shape[1]
+    positions = jnp.minimum(positions, table.shape[1] * bl - 1)
     phys = jnp.take_along_axis(table, positions // bl, axis=1)  # (n_slots,S)
     flat_idx = (phys * bl + positions % bl).reshape(-1)
     flat = pool.reshape(-1, *pool.shape[2:])
@@ -92,16 +116,19 @@ def scatter(pool, table, positions, new):
 
 
 # ---------------------------------------------------------------------------
-# Host side: block allocation
+# Host side: block allocation + prefix sharing
 # ---------------------------------------------------------------------------
 
 class BlockTable:
-    """Host-side block table + free-list allocator over a shared pool.
+    """Host-side block table + refcounted free-list allocator over a
+    shared pool.
 
     One table serves every layer: layer pools are stacked leaves of the
     cache pytree, and a physical block id indexes the same slot's pages in
     each of them. Block 0 is reserved as the null block and never
-    allocated."""
+    allocated. Fresh blocks start at refcount 1; :meth:`attach` bumps the
+    count for each slot sharing a block; :meth:`release` decrements and
+    frees at zero."""
 
     def __init__(self, layout: PagedLayout, n_slots: int):
         self.layout = layout
@@ -109,6 +136,13 @@ class BlockTable:
         self.table = np.zeros((n_slots, layout.blocks_per_slot), np.int32)
         self._n_alloc = np.zeros(n_slots, np.int32)   # allocated per slot
         self._free: List[int] = list(range(layout.n_blocks - 1, 0, -1))
+        self.refcount = np.zeros(layout.n_blocks, np.int32)
+        # prefix map: tuple(tokens of a whole-block-aligned prefix) → the
+        # physical block holding its LAST block. Chained lookups walk
+        # longer and longer prefixes, so a hit set is always a prefix
+        # chain of resident blocks.
+        self._prefix_to_block: Dict[Tuple[int, ...], int] = {}
+        self._block_prefix: Dict[int, Tuple[int, ...]] = {}
 
     @property
     def free_blocks(self) -> int:
@@ -128,7 +162,9 @@ class BlockTable:
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot`` to hold ``n_tokens`` positions; False if the pool
-        is exhausted (caller backpressures the request queue)."""
+        is exhausted (caller backpressures the request queue). Newly
+        allocated blocks are private (refcount 1); blocks the slot already
+        holds — owned or attached — are never touched."""
         need = blocks_for(n_tokens, self.layout.block_len)
         if need > self.layout.blocks_per_slot:
             raise ValueError(
@@ -140,21 +176,93 @@ class BlockTable:
         if need - have > len(self._free):
             return False
         for j in range(have, need):
-            self.table[slot, j] = self._free.pop()
+            b = self._free.pop()
+            self.table[slot, j] = b
+            self.refcount[b] = 1
         self._n_alloc[slot] = need
         return True
 
     def release(self, slot: int) -> None:
-        """Return every block of ``slot`` to the free list."""
+        """Drop ``slot``'s reference on every block it holds. A block
+        returns to the free list (and leaves the prefix map) only when its
+        LAST reference goes — shared prefix blocks survive as long as any
+        slot still reads them."""
         n = int(self._n_alloc[slot])
         for j in range(n):
-            self._free.append(int(self.table[slot, j]))
+            b = int(self.table[slot, j])
             self.table[slot, j] = 0
+            self.refcount[b] -= 1
+            assert self.refcount[b] >= 0, f"block {b}: refcount underflow"
+            if self.refcount[b] == 0:
+                key = self._block_prefix.pop(b, None)
+                if key is not None:
+                    self._prefix_to_block.pop(key, None)
+                self._free.append(b)
         self._n_alloc[slot] = 0
+
+    # -- prefix sharing -----------------------------------------------------
+    def match_prefix(self, tokens: Sequence[int],
+                     max_tokens: int | None = None) -> List[int]:
+        """Longest chain of resident full blocks matching ``tokens``'
+        prefix: the physical block ids for blocks 0, 1, ... as long as
+        every whole-block prefix is registered. ``max_tokens`` caps the
+        match (callers pass len(prompt) - 1 so at least one suffix token
+        is always left to prefill — its logits score the first output)."""
+        bl = self.layout.block_len
+        limit = len(tokens) if max_tokens is None else min(len(tokens),
+                                                          max_tokens)
+        chain: List[int] = []
+        for j in range(limit // bl):
+            b = self._prefix_to_block.get(tuple(tokens[:(j + 1) * bl]))
+            if b is None:
+                break
+            chain.append(b)
+        return chain
+
+    def attach(self, slot: int, phys_blocks: Sequence[int]) -> int:
+        """Map ``slot``'s leading logical blocks onto resident physical
+        blocks (a :meth:`match_prefix` chain), bumping each refcount. The
+        slot must be empty. Returns the number of shared TOKENS."""
+        assert int(self._n_alloc[slot]) == 0, \
+            f"slot {slot}: attach on a non-empty slot"
+        for j, b in enumerate(phys_blocks):
+            assert self.refcount[b] > 0, f"block {b}: attach to a free block"
+            self.table[slot, j] = b
+            self.refcount[b] += 1
+        self._n_alloc[slot] = len(phys_blocks)
+        return len(phys_blocks) * self.layout.block_len
+
+    def register_prefix(self, slot: int, tokens: Sequence[int],
+                        max_tokens: int | None = None) -> int:
+        """After ``slot``'s K/V for ``tokens`` is resident, publish its
+        whole-block prefixes so later admissions can attach. Capped at
+        ``max_tokens`` (same cap as match_prefix: never publish a block a
+        sharer could not legally attach). Registration is idempotent and
+        first-writer-wins: an existing entry for the same token prefix is
+        kept (both blocks hold identical K/V; keeping one maximizes
+        sharing). Returns the number of blocks newly registered."""
+        bl = self.layout.block_len
+        limit = len(tokens) if max_tokens is None else min(len(tokens),
+                                                          max_tokens)
+        fresh = 0
+        for j in range(limit // bl):
+            key = tuple(tokens[:(j + 1) * bl])
+            if key in self._prefix_to_block:
+                continue
+            b = int(self.table[slot, j])
+            if b == 0 or b in self._block_prefix:
+                continue
+            self._prefix_to_block[key] = b
+            self._block_prefix[b] = key
+            fresh += 1
+        return fresh
 
     def rows(self, slots) -> np.ndarray:
         """Table restricted to ``slots``: other rows are nulled so a
-        batched prefill cannot clobber live pages of mid-decode slots."""
+        batched prefill cannot clobber live pages of mid-decode slots.
+        (Shared blocks stay IN the returned rows — suffix prefill reads
+        them through the gathered view / paged kernel but its writes all
+        land at positions ≥ the shared length.)"""
         out = np.zeros_like(self.table)
         for s in slots:
             out[s] = self.table[s]
@@ -162,3 +270,23 @@ class BlockTable:
 
     def as_array(self) -> jnp.ndarray:
         return jnp.asarray(self.table)
+
+    def check(self) -> None:
+        """Accounting invariants (test hook): every non-free block's
+        refcount equals the number of table rows referencing it; free
+        blocks have refcount 0; no block is both free and referenced."""
+        refs = np.zeros(self.layout.n_blocks, np.int64)
+        for s in range(self.n_slots):
+            for j in range(int(self._n_alloc[s])):
+                refs[int(self.table[s, j])] += 1
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate block in free list"
+        for b in range(1, self.layout.n_blocks):
+            if b in free:
+                assert self.refcount[b] == 0 and refs[b] == 0, \
+                    (b, int(self.refcount[b]), int(refs[b]))
+            else:
+                assert self.refcount[b] == refs[b] > 0, \
+                    (b, int(self.refcount[b]), int(refs[b]))
+        assert self.blocks_in_use + self.free_blocks == \
+            self.layout.n_blocks - 1

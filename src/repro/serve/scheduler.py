@@ -1,25 +1,34 @@
-"""Slot scheduler for the paged serve engine: admission, batched prefill
-shaping, per-slot decode positions, and block lifecycle.
+"""Slot scheduler for the paged serve engine: arrival-gated admission,
+shared-prefix attach, batched (suffix-)prefill shaping, per-slot decode
+positions, and block lifecycle.
 
 The scheduler is pure host-side bookkeeping — it never touches device
 arrays except to build the int32 inputs of the two jit'd programs:
 
 * **Admission** (:meth:`admit`): queued requests are matched to free slots
-  as long as their prompt fits the block pool; admitted prompts are padded
-  to a shared power-of-two bucket length, so the batched prefill compiles
-  once per bucket instead of once per prompt length. Rows of the prefill
-  batch that belong to slots mid-decode get nulled block-table rows —
-  their (garbage) writes land in the null block, never on live pages.
+  as long as their prompt fits the block pool AND they have arrived
+  (``req.arrival`` vs the engine's tick clock — the continuous-batching
+  stream loop admits into freed slots every decode step, so a request
+  never waits for a drain). With ``prefix_sharing``, admission first asks
+  the block table for the longest resident block-aligned prefix matching
+  the prompt (:meth:`BlockTable.match_prefix`) and attaches those blocks
+  read-only (refcount++); only the remaining suffix is prefilled. Admitted
+  suffixes are padded to a shared power-of-two bucket length, so the
+  batched prefill compiles once per bucket instead of once per prompt
+  length. Rows of the prefill batch that belong to slots mid-decode get
+  nulled block-table rows — their (garbage) writes land in the null
+  block, never on live pages.
 * **Decode shaping** (:meth:`decode_positions`): each active slot steps at
   its OWN position; idle slots sit at 0 with a nulled table row. This is
   the fix for the legacy engine's shared ``max(pos)`` write offset, where
   a lagging slot's K/V was scattered at another slot's position.
 * **Block lifecycle**: blocks are allocated lazily as positions cross
-  block boundaries (:meth:`ensure_decode_blocks`) and returned to the free
-  list the moment a request finishes (:meth:`finish`) or its slot is
+  block boundaries (:meth:`ensure_decode_blocks`) and their refcounts
+  dropped the moment a request finishes (:meth:`finish`) or its slot is
   preempted (:meth:`evict` — the engine requeues the request with its
   progress folded into ``resume`` and recomputes it later), so resident
-  KV tracks live tokens.
+  KV tracks live tokens. Shared prefix blocks return to the pool only
+  when the LAST reader releases them.
 """
 from __future__ import annotations
 
@@ -49,7 +58,8 @@ class Scheduler:
     """Owns slots, the request queue, and the block table."""
 
     def __init__(self, n_slots: int, max_len: int, layout: PagedLayout,
-                 *, min_prefill_bucket: int = 8):
+                 *, min_prefill_bucket: int = 8,
+                 prefix_sharing: bool = False):
         self.n_slots = n_slots
         self.max_len = max_len
         self.blocks = BlockTable(layout, n_slots)
@@ -57,6 +67,10 @@ class Scheduler:
         self.slot_req: List[Optional[object]] = [None] * n_slots
         self.queue: List[object] = []
         self.min_prefill_bucket = min_prefill_bucket
+        self.prefix_sharing = prefix_sharing
+        # tokens the shared-prefix attach skipped prefilling for, per slot
+        # (engine folds them into its prefill traffic model at admission)
+        self._shared = np.zeros(n_slots, np.int32)
 
     # -- admission ------------------------------------------------------------
     def submit(self, req) -> None:
@@ -70,49 +84,83 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slot_req)
 
-    def admit(self) -> List[Tuple[int, object]]:
-        """Move queued requests into free slots, allocating their prompt
-        blocks. Stops at the first request the pool cannot hold (FIFO, no
-        reordering) — it stays queued and retries after blocks free up.
-        Prompt-length validation is the engine's job (submit time)."""
+    def next_arrival(self) -> Optional[int]:
+        """Earliest arrival tick among queued requests (None when the
+        queue is empty or untimestamped) — the stream loop fast-forwards
+        its clock here when every slot is idle."""
+        ts = [getattr(r, "arrival", 0) or 0 for r in self.queue]
+        return min(ts) if ts else None
+
+    def admit(self, now: Optional[int] = None) -> List[Tuple[int, object]]:
+        """Move queued, ARRIVED requests into free slots: attach any
+        resident shared prefix read-only, then allocate the rest of the
+        prompt's blocks. Stops at the first request the pool cannot hold
+        or that has not arrived yet (FIFO, no reordering — queue order is
+        arrival order) — it stays queued and retries next step. Prompt-
+        length validation is the engine's job (submit time)."""
         admitted = []
         for s in range(self.n_slots):
             if self.slot_req[s] is not None or not self.queue:
                 continue
             req = self.queue[0]
-            plen = len(_ptoks(req))
-            if not self.blocks.can_fit(plen):
+            if now is not None and (getattr(req, "arrival", 0) or 0) > now:
+                break
+            toks = _ptoks(req)
+            plen = len(toks)
+            shared = 0
+            if self.prefix_sharing:
+                # cap at plen - 1: at least one suffix token must run
+                # through the model — its logits score the first output
+                chain = self.blocks.match_prefix(toks, plen - 1)
+                need_fresh = blocks_for(plen, self.blocks.layout.block_len) \
+                    - len(chain)
+                if need_fresh > self.blocks.free_blocks:
+                    break
+                shared = self.blocks.attach(s, chain)
+            elif not self.blocks.can_fit(plen):
                 break
             self.queue.pop(0)
             self.blocks.ensure(s, plen)
+            self._shared[s] = shared
             self.slot_req[s] = req
             self.pos[s] = 0
             admitted.append((s, req))
         return admitted
 
     def build_prefill(self, admitted) -> Tuple[np.ndarray, np.ndarray,
-                                               np.ndarray]:
-        """(tokens (n_slots, bucket), lengths (n_slots,), table rows) for
-        one batched prefill over the admitted slots. Non-admitted rows
-        carry zero tokens, length 1, and a nulled table row. The bucket is
-        capped at view_len so padded positions always stay inside the
-        block-table width — the null-block guarantee in kv.scatter must
-        never depend on out-of-bounds gather semantics."""
-        bucket = min(_bucket(max(len(_ptoks(r)) for _, r in admitted),
+                                               np.ndarray, np.ndarray]:
+        """(tokens (n_slots, bucket), lengths (n_slots,), offsets
+        (n_slots,), table rows) for one batched SUFFIX prefill over the
+        admitted slots: row s carries the prompt tokens from
+        ``offsets[s]`` (the shared-prefix length, 0 without sharing) on,
+        and the forward runs at true positions offset + i. Non-admitted
+        rows carry zero tokens, length 1, offset 0, and a nulled table
+        row. The bucket is capped at view_len; padding positions beyond
+        offset + bucket are clamped INSIDE kv.scatter (never out of
+        bounds, never into a shared block)."""
+        bucket = min(_bucket(max(len(_ptoks(r)) - int(self._shared[s])
+                                 for s, r in admitted),
                              self.min_prefill_bucket),
                      self.blocks.layout.view_len)
         tokens = np.zeros((self.n_slots, bucket), np.int32)
         lengths = np.ones(self.n_slots, np.int32)
+        offsets = np.zeros(self.n_slots, np.int32)
         for s, req in admitted:
-            toks = _ptoks(req)
+            toks = _ptoks(req)[int(self._shared[s]):]
             tokens[s, :len(toks)] = toks
             lengths[s] = len(toks)
+            offsets[s] = self._shared[s]
         table = self.blocks.rows([s for s, _ in admitted])
-        return tokens, lengths, table
+        return tokens, lengths, offsets, table
 
     def finish_prefill(self, admitted) -> None:
+        """Advance admitted slots past their prompts and publish each
+        prompt's whole-block prefixes for future sharers."""
         for s, req in admitted:
-            self.pos[s] = len(_ptoks(req))
+            toks = _ptoks(req)
+            self.pos[s] = len(toks)
+            if self.prefix_sharing:
+                self.blocks.register_prefix(s, toks, len(toks) - 1)
 
     # -- decode ---------------------------------------------------------------
     def ensure_decode_blocks(self, slots) -> List[int]:
@@ -137,10 +185,12 @@ class Scheduler:
         self.pos[slot] += 1
 
     def finish(self, slot: int) -> None:
-        """Release the slot and every block it held."""
+        """Release the slot and drop its reference on every block it
+        held (shared blocks stay resident for their other readers)."""
         self.blocks.release(slot)
         self.slot_req[slot] = None
         self.pos[slot] = 0
+        self._shared[slot] = 0
 
     def evict(self, slot: int):
         """Preempt ``slot``: free its blocks and hand its request back to
@@ -149,6 +199,7 @@ class Scheduler:
         self.blocks.release(slot)
         self.slot_req[slot] = None
         self.pos[slot] = 0
+        self._shared[slot] = 0
         return req
 
     def preempt_youngest(self):

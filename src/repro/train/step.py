@@ -111,11 +111,18 @@ def make_prefill_step(cfg: ModelConfig, api: ModelApi, *, greedy: bool = True,
     O(prompt_len) per-token decode dispatches with O(1) per admitted batch.
     Rows are padded to a shared S; padding positions are never attended by
     valid queries (causal mask) and their pages are overwritten by decode
-    before they first become visible."""
+    before they first become visible.
+
+    ``offsets`` (B,) int32 (paged caches only) switches to chunked SUFFIX
+    prefill: row s holds the prompt tokens from position offsets[s] on
+    (the shared-prefix length), ``lengths`` are SUFFIX lengths, and the
+    forward attends the slot's resident prior pages in place — see
+    models/lm.prefill_step."""
     def prefill_step(params, consts, tokens, cache, lengths, block_table=None,
-                     rng=None):
+                     rng=None, offsets=None):
         logits, new_cache = api.prefill_step(cfg, params, consts, tokens,
-                                             cache, block_table=block_table)
+                                             cache, block_table=block_table,
+                                             offsets=offsets)
         rows = jnp.arange(tokens.shape[0], dtype=jnp.int32)
         last_idx = jnp.clip(lengths - 1, 0, tokens.shape[1] - 1)
         last = logits[rows, last_idx, :cfg.vocab_size].astype(jnp.float32)

@@ -45,6 +45,17 @@ class strategies:
     def booleans():
         return _Strategy(lambda rng: bool(rng.integers(2)))
 
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elements):
+        return _Strategy(lambda rng: tuple(e.draw(rng) for e in elements))
+
 
 def given(**strats):
     def decorate(fn):
