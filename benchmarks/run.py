@@ -10,6 +10,9 @@ the perf trajectory is diffable across PRs instead of living in
 CHANGES.md prose. Related benches share a group file (the two serve
 benches → BENCH_serve.json, the two train-step benches →
 BENCH_train_step.json); everything else snapshots under its own name.
+Snapshots are ``{"meta": {...}, "rows": [...]}`` — the meta header
+(git sha + commit count, UTC timestamp, jax version, device kind) makes
+each number attributable to the exact tree and machine that produced it.
 
   PYTHONPATH=src python -m benchmarks.run            # full (few minutes)
   PYTHONPATH=src python -m benchmarks.run --quick    # memory+kernels only
@@ -25,6 +28,39 @@ import sys
 import time
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _snapshot_meta() -> dict:
+    """Provenance header for BENCH_*.json: which tree, when, on what.
+    Every field degrades to None rather than failing — a snapshot from a
+    tarball (no git) or an exotic backend is still a snapshot."""
+    import datetime
+    import subprocess
+
+    def _git(*args):
+        try:
+            return subprocess.run(
+                ("git", "-C", str(REPO_ROOT)) + args, check=True,
+                capture_output=True, text=True, timeout=10).stdout.strip()
+        except Exception:
+            return None
+
+    meta = {
+        "git_sha": _git("rev-parse", "--short", "HEAD"),
+        "git_commits": (lambda c: int(c) if c else None)(
+            _git("rev-list", "--count", "HEAD")),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+    try:
+        import jax
+        dev = jax.devices()[0]
+        meta["jax_version"] = jax.__version__
+        meta["device_kind"] = dev.device_kind
+        meta["platform"] = dev.platform
+    except Exception:
+        meta.update(jax_version=None, device_kind=None, platform=None)
+    return meta
 
 # benches whose rows land in one shared snapshot file
 SNAPSHOT_GROUPS = {
@@ -94,10 +130,12 @@ def main(argv=None):
         groups.setdefault(SNAPSHOT_GROUPS.get(name, name), []).extend(rows)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
     if not args.no_snapshots:
+        meta = _snapshot_meta()
         for group, rows in groups.items():
             path = REPO_ROOT / f"BENCH_{group}.json"
             with open(path, "w") as f:
-                json.dump(rows, f, indent=1, default=str, sort_keys=True)
+                json.dump({"meta": meta, "rows": rows}, f, indent=1,
+                          default=str, sort_keys=True)
                 f.write("\n")
             print(f"# snapshot: {path.name} ({len(rows)} rows)", flush=True)
     if args.json_out:

@@ -16,7 +16,10 @@ Reports, per engine configuration:
   shared system prompt, reporting p50/p99 TTFT (engine clock ticks) and
   tokens/sec/slot for legacy vs drained-paged vs continuous vs
   continuous+prefix-shared admission, plus the modeled prefill HBM write
-  bytes copy-on-write sharing avoids.
+  bytes copy-on-write sharing avoids. Percentiles are read from the
+  engine's ``repro.obs.metrics`` TTFT histograms (and cross-checked
+  against ``np.percentile`` over the raw per-request stamps — exact on
+  integer ticks with unit-width buckets).
 
   PYTHONPATH=src python -m benchmarks.serve_bench
   PYTHONPATH=src python -m benchmarks.serve_bench --requests 12 --new-tokens 24
@@ -98,9 +101,7 @@ def run(arch="llama_60m", requests=8, new_tokens=16, slots=4, max_len=64,
         for wp in {_bucket(len(p), 8): p for p in prompts}.values():
             eng.submit(wp, max_new_tokens=2)
             eng.run_until_drained()
-        eng.dispatches = {"prefill": 0, "decode": 0}
-        eng._steps = 0
-        eng.completed.clear()
+        eng.reset_metrics()
 
         reqs, stats, dt = _drain_timed(eng, prompts, new_tokens,
                                        stagger and kw.get("paged", False))
@@ -283,16 +284,13 @@ def slo_rows(arch="llama_60m", requests=8, new_tokens=12, slots=4,
     for label, kw, loop in modes:
         eng = ServeEngine(cfg, params, consts, n_slots=slots,
                           max_len=max_len, **kw)
-        # warm the jit caches (one drain per prefill bucket), then reset
-        # every counter the measurement reads
+        # warm the jit caches (one drain per prefill bucket), then zero
+        # every instrument the measurement reads (registry reset — the
+        # counter views are read-only)
         for wp in {_bucket(len(p), 8): p for p in prompts}.values():
             eng.submit(wp, max_new_tokens=2)
             eng.run_until_drained()
-        eng.dispatches = {"prefill": 0, "decode": 0}
-        eng.prefill_traffic = {k: 0 for k in eng.prefill_traffic}
-        eng._steps = 0
-        eng.clock = 0
-        eng.completed.clear()
+        eng.reset_metrics()
 
         t0 = time.perf_counter()
         if loop == "stream":
@@ -304,17 +302,29 @@ def slo_rows(arch="llama_60m", requests=8, new_tokens=12, slots=4,
             reqs = _drain_arrivals(eng, prompts, arrivals, new_tokens)
         dt = time.perf_counter() - t0
 
+        # SLO percentiles come from the engine's registry histogram (the
+        # obs path IS the measurement); the hand-computed np.percentile
+        # over per-request stamps must agree exactly — tick TTFTs are
+        # integers on unit-width buckets, where the bucket-count
+        # reconstruction is numpy-equivalent (see obs.metrics.Histogram)
+        ht = eng.obs.histogram("serve.ttft_ticks")
         ttft = np.array([r.t_first - r.arrival for r in reqs], np.float64)
+        p50, p99 = ht.percentile(50), ht.percentile(99)
+        assert ht.count == len(reqs), (ht.count, len(reqs))
+        assert p50 == float(np.percentile(ttft, 50)), \
+            (label, p50, float(np.percentile(ttft, 50)))
+        assert p99 == float(np.percentile(ttft, 99)), \
+            (label, p99, float(np.percentile(ttft, 99)))
         out_toks = sum(len(r.out) for r in reqs)
         match = sum(r.out == t for r, t in zip(reqs, truth))
         pt = dict(eng.prefill_traffic) if eng.paged else \
             {"tokens_total": prompt_toks, "tokens_prefilled": prompt_toks,
              "tokens_shared": 0}
-        stats[label] = {"ttft": ttft, "traffic": pt}
+        stats[label] = {"ttft_hist": ht, "traffic": pt}
         rows.append({
             "bench": "serve_slo", "mode": label,
-            "p50_ttft_ticks": float(np.percentile(ttft, 50)),
-            "p99_ttft_ticks": float(np.percentile(ttft, 99)),
+            "p50_ttft_ticks": p50,
+            "p99_ttft_ticks": p99,
             "tok_per_s_per_slot": round(out_toks / dt / slots, 1),
             "prefill_dispatches": eng.dispatches["prefill"],
             "decode_steps": eng._steps,
@@ -336,8 +346,8 @@ def slo_rows(arch="llama_60m", requests=8, new_tokens=12, slots=4,
             f"{r['mode']}: diverged from single-request greedy truth"
     # headline SLO claim: continuous admission strictly beats drained at
     # the tail — a request arriving mid-drain no longer waits out the drain
-    p99_c = float(np.percentile(stats["paged/continuous"]["ttft"], 99))
-    p99_d = float(np.percentile(stats["paged/drained"]["ttft"], 99))
+    p99_c = stats["paged/continuous"]["ttft_hist"].percentile(99)
+    p99_d = stats["paged/drained"]["ttft_hist"].percentile(99)
     assert p99_c < p99_d, (p99_c, p99_d)
     # headline sharing claim: with N sharers of one prefix, attach skips
     # ≥ (N−1)/N of the shared-prefix token mass (the first sharer pays)

@@ -14,7 +14,7 @@ if ! python -c "import hypothesis" 2>/dev/null; then
   pip install -q -r requirements-dev.txt 2>/dev/null || true
 fi
 if python -c "import hypothesis" 2>/dev/null; then
-  echo "hypothesis available — property tests run with full shrinking"
+  echo "hypothesis $(python -c 'import hypothesis; print(hypothesis.__version__)') — property tests run with full shrinking (pin: requirements-dev.txt)"
 else
   echo "!! NOTICE: hypothesis is not installed — property tests will run"
   echo "!! on the seeded-loop fallback in tests/_propshim.py (no shrinking,"
@@ -36,9 +36,11 @@ python -m repro.launch.train --arch llama_60m --smoke --mode sltrain \
   --ckpt-dir "$(mktemp -d)"
 
 echo "== per-layer smoke: update_mode=per_layer 8-bit 3-step train =="
+OBS_DIR="$(mktemp -d)"
 python -m repro.launch.train --arch llama_60m --smoke --mode sltrain \
   --update-mode per_layer --optimizer adam8bit --steps 3 --batch 2 --seq 16 \
-  --log-every 1 --ckpt-dir "$(mktemp -d)"
+  --log-every 1 --ckpt-dir "$(mktemp -d)" --layer-timing \
+  --metrics-out "$OBS_DIR/train.jsonl" --trace-out "$OBS_DIR/train_trace.json"
 
 echo "== serve smoke: paged KV engine, 3 staggered requests =="
 python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8 \
@@ -52,6 +54,23 @@ python -m repro.launch.serve --arch llama_60m --smoke --paged \
 echo "== serve smoke: continuous batching + copy-on-write prefix sharing =="
 python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8 \
   --stream --prefix-sharing --requests 4 --slots 2 --new-tokens 4 \
-  --max-len 64
+  --max-len 64 --metrics-out "$OBS_DIR/serve.jsonl" \
+  --trace-out "$OBS_DIR/serve_trace.json"
+
+echo "== obs smoke: metrics JSONL parses, traces validate =="
+python - "$OBS_DIR" <<'EOF'
+import json, sys
+from repro.obs import trace as obs_trace
+d = sys.argv[1]
+for name in ("train", "serve"):
+    lines = [json.loads(l) for l in open(f"{d}/{name}.jsonl")]
+    assert lines and all("metrics" in l and "ts" in l for l in lines), name
+    n = obs_trace.validate_file(f"{d}/{name}_trace.json")
+    print(f"obs smoke: {name}: {len(lines)} JSONL line(s), "
+          f"{n} valid trace events")
+tm = lines  # serve lines from the loop's last iteration
+h = tm[-1]["metrics"].get("serve.ttft_ticks")
+assert h and h["count"] > 0 and "p50" in h, h
+EOF
 
 echo "ci_check: all gates passed"

@@ -236,3 +236,13 @@ def model_flops(cfg, n_tokens: int, kind: str = "train") -> float:
     _, active = param_count_active(cfg)
     mult = 6.0 if kind == "train" else 2.0
     return mult * active * n_tokens
+
+
+def train_mfu(cfg, n_tokens: int, dt_s: float, chips: int = 1) -> float:
+    """Model FLOPs utilisation of one training step: the 6·N·D model
+    FLOPs actually delivered per second, as a fraction of the chips' peak
+    (``PEAK_FLOPS`` each). The trainer publishes this per step as the
+    ``train.mfu`` gauge."""
+    if dt_s <= 0:
+        return 0.0
+    return model_flops(cfg, n_tokens, "train") / dt_s / (chips * PEAK_FLOPS)

@@ -10,6 +10,8 @@ Usage:
       --attn-kernel paged
   python -m repro.launch.serve --arch llama_60m --smoke --paged \
       --stream --prefix-sharing
+  python -m repro.launch.serve --arch llama_60m --smoke --paged --stream \
+      --metrics-out /tmp/serve.jsonl --trace-out /tmp/serve_trace.json
 """
 from __future__ import annotations
 
@@ -20,6 +22,7 @@ import jax
 import numpy as np
 
 from repro.models import registry
+from repro.obs import trace as obs_trace
 from repro.serve.engine import ServeEngine
 
 
@@ -63,6 +66,16 @@ def main(argv=None):
     ap.add_argument("--use-mesh", action="store_true",
                     help="place weights/cache via repro.dist.sharding on "
                          "the named local mesh")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append one registry snapshot JSONL line here at "
+                         "the end of the run (repro.obs.metrics)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON (Perfetto-loadable) "
+                         "with engine phase spans + per-request tick "
+                         "lifecycle lanes (repro.obs.trace)")
+    ap.add_argument("--jax-profile-dir", default=None,
+                    help="also record a jax.profiler trace into this dir "
+                         "for the duration of the run")
     args = ap.parse_args(argv)
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
@@ -81,12 +94,17 @@ def main(argv=None):
         mesh = dist_sharding.make_local_mesh()
     if (args.stream or args.prefix_sharing) and not args.paged:
         ap.error("--stream/--prefix-sharing require --paged")
+    trace = obs_trace.Trace(
+        enabled=bool(args.trace_out or args.jax_profile_dir),
+        jax_profile_dir=args.jax_profile_dir)
+    trace.start()
     eng = ServeEngine(cfg, params, consts, n_slots=args.slots,
                       max_len=args.max_len,
                       sparse_decode=args.sparse_decode, mesh=mesh,
                       paged=args.paged, block_len=args.block_len,
                       attn_kernel=args.attn_kernel,
-                      prefix_sharing=args.prefix_sharing)
+                      prefix_sharing=args.prefix_sharing,
+                      trace=trace)
     rng = np.random.default_rng(0)
     prompts = []
     shared = rng.integers(3, cfg.vocab_size, size=16).tolist()
@@ -132,10 +150,25 @@ def main(argv=None):
               "prompt tokens attached from resident pages (never "
               "recomputed or rewritten)")
     if args.stream:
+        # both TTFT units, from the engine's registry histograms: ticks
+        # (deterministic dispatch clock) and wall ms (what an SLO means)
+        ht = eng.obs.histogram("serve.ttft_ticks")
+        hw = eng.obs.histogram("serve.ttft_wall_ms")
         tt = sorted(r.t_first - r.arrival for r in reqs)
-        print(f"  TTFT ticks: p50={tt[len(tt)//2]} max={tt[-1]}")
+        print(f"  TTFT: p50={ht.percentile(50):.0f} ticks "
+              f"(max={tt[-1]}) | p50={hw.percentile(50):.1f}ms "
+              f"p99={hw.percentile(99):.1f}ms wall")
     for r in reqs[:4]:
         print(f"  req {r.uid}: prompt {r.prompt} -> {r.out}")
+    trace.stop()
+    if args.metrics_out:
+        eng.obs.write_jsonl(args.metrics_out,
+                            extra={"run": "serve", "arch": args.arch,
+                                   "requests": len(reqs)})
+        print(f"  metrics snapshot appended to {args.metrics_out}")
+    if args.trace_out:
+        n = trace.export(args.trace_out)
+        print(f"  trace: {n} events -> {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -9,16 +9,19 @@ Usage:
   python -m repro.launch.train --arch llama_60m --smoke --steps 200
   python -m repro.launch.train --arch llama_60m --smoke --mode dense   # baseline
   python -m repro.launch.train --arch yi_34b --smoke --optimizer adam8bit
+  python -m repro.launch.train --arch llama_60m --smoke --steps 20 \
+      --update-mode per_layer --layer-timing \
+      --metrics-out /tmp/train.jsonl --trace-out /tmp/train_trace.json
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 
 from repro.configs.base import (OptimizerConfig, ShardingConfig, TrainConfig,
                                 ParamConfig)
 from repro.models import registry
+from repro.obs import trace as obs_trace
 from repro.train.trainer import Trainer
 
 
@@ -80,7 +83,19 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
-    ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--metrics-out", default=None,
+                    help="append registry snapshot JSONL lines here (one "
+                         "per log interval; repro.obs.metrics)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON of per-step spans "
+                         "(data/dispatch/sync; repro.obs.trace)")
+    ap.add_argument("--layer-timing", action="store_true",
+                    help="with --update-mode per_layer: record per-layer "
+                         "update wall time via ordered io_callback into "
+                         "train.perlayer.layer_update_ms")
+    ap.add_argument("--jax-profile-dir", default=None,
+                    help="also record a jax.profiler trace into this dir "
+                         "for the duration of the run")
     ap.add_argument("--multipod", action="store_true",
                     help="initialize jax.distributed from JAX_* env vars "
                          "(scripts/launch_multipod.sh sets them)")
@@ -106,13 +121,20 @@ def main(argv=None):
         mesh = dist_sharding.make_local_mesh()
 
     tc = build_train_config(args)
-    trainer = Trainer(tc, mesh=mesh)
+    trace = obs_trace.Trace(
+        enabled=bool(args.trace_out or args.jax_profile_dir),
+        jax_profile_dir=args.jax_profile_dir)
+    trace.start()
+    trainer = Trainer(tc, mesh=mesh, trace=trace,
+                      metrics_out=args.metrics_out,
+                      layer_timing=args.layer_timing)
     state = trainer.run()
+    trace.stop()
     print(f"final step {state.step}: "
           f"loss={trainer.metrics_history[-1]['loss']:.4f}")
-    if args.metrics_out:
-        with open(args.metrics_out, "w") as f:
-            json.dump(trainer.metrics_history, f)
+    if args.trace_out:
+        n = trace.export(args.trace_out)
+        print(f"trace: {n} events -> {args.trace_out}")
     return trainer
 
 

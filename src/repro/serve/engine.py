@@ -48,10 +48,23 @@ through the Pallas paged-attention kernels (kernels/paged_attention.py)
 which stream K/V blocks through VMEM, so per-layer decode HBM traffic
 tracks live tokens instead of ``n_slots × view_len`` (the ``kv_traffic``
 counters model both; benchmarks/serve_bench.py reports them).
+
+Observability (repro.obs): every counter above is a registry instrument —
+the ``dispatches``/``prefill_traffic``/``kv_traffic`` attributes are
+read-only :class:`repro.obs.metrics.MetricView` shims over them, so old
+readers keep working while ``obs.snapshot()``/JSONL export and the TTFT
+histograms (``serve.ttft_ticks`` exact on the tick clock,
+``serve.ttft_wall_ms`` on the monotonic clock) come for free. With a
+``Trace`` attached the engine additionally emits wall spans per phase
+(admission, prefill dispatch, decode dispatch, block-until-ready) and a
+tick-timeline lifecycle per request (queued → prefill → decode, one lane
+per uid at 1 tick = ``trace.TICK_US`` us) whose span geometry reproduces
+each request's tick TTFT exactly.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -61,6 +74,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.kv import PagedLayout
 from repro.serve.scheduler import Scheduler
 from repro.train import step as step_lib
@@ -81,10 +96,21 @@ class Request:
     _progress_mark: int = -1
     # stream timing, in engine clock ticks (= jit dispatches, the
     # deterministic unit of serving work): when the request arrives, when
-    # its first token lands, when it completes. TTFT = t_first - arrival.
+    # it is admitted to a slot, when its first token lands, when it
+    # completes. TTFT = t_first - arrival.
     arrival: int = 0
+    t_admit: Optional[int] = None
     t_first: Optional[int] = None
     t_done: Optional[int] = None
+    # the same milestones on the MONOTONIC wall clock (time.perf_counter
+    # seconds) — ticks are the deterministic test currency, wall time is
+    # what an SLO means. ``wall_arrival`` stamps submit() time: for a
+    # request submitted ahead of its tick ``arrival``, wall TTFT measures
+    # from submission while tick TTFT measures from the stamped arrival.
+    wall_arrival: Optional[float] = None
+    wall_admit: Optional[float] = None
+    wall_first: Optional[float] = None
+    wall_done: Optional[float] = None
 
 
 class ServeEngine:
@@ -92,7 +118,9 @@ class ServeEngine:
                  max_len: int = 256, sparse_decode: bool = False, mesh=None,
                  paged: bool = False, block_len: int = 16, n_blocks: int = 0,
                  attn_kernel: Optional[str] = None,
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False,
+                 obs: Optional[obs_metrics.Registry] = None,
+                 trace: Optional[obs_trace.Trace] = None):
         if sparse_decode and cfg.param.mode == "sltrain":
             cfg = dataclasses.replace(
                 cfg, param=dataclasses.replace(cfg.param, exec_mode="sparse"))
@@ -120,6 +148,13 @@ class ServeEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.paged = paged
+        # each engine defaults to its OWN registry so side-by-side engines
+        # (benchmarks compare four per run) never share counters; pass a
+        # registry to aggregate. The trace default is a disabled recorder
+        # (span() is a no-op) — hot loops pay one attribute check.
+        self.obs = obs if obs is not None else obs_metrics.Registry()
+        self.trace = trace if trace is not None else \
+            obs_trace.Trace(enabled=False)
         if paged:
             if self.api.prefill_step is None:
                 raise ValueError(f"family {cfg.family!r} has no prefill_step;"
@@ -130,7 +165,8 @@ class ServeEngine:
                                              paged=True, block_len=block_len,
                                              n_blocks=layout.n_blocks)
             self.sched = Scheduler(n_slots, max_len, layout,
-                                   prefix_sharing=prefix_sharing)
+                                   prefix_sharing=prefix_sharing,
+                                   obs=self.obs)
             self._prefill_fn = jax.jit(step_lib.make_prefill_step(cfg, self.api))
         else:
             self.cache = self.api.init_cache(cfg, n_slots, max_len)
@@ -161,22 +197,73 @@ class ServeEngine:
         # legacy prefill burns len(prompt) ticks where the batched paged
         # prefill burns 1 — exactly the dispatch economics being measured.
         self.clock = 0
+        # registry instruments behind the legacy counter-dict attributes.
         # jit dispatch counters (benchmarks/serve_bench.py reads these to
-        # show batched prefill is O(1) dispatches per admission batch)
-        self.dispatches = {"prefill": 0, "decode": 0}
+        # show batched prefill is O(1) dispatches per admission batch);
+        disp = self.obs.counter("serve.dispatches",
+                                help="jit dispatches by phase")
+        self._c_disp = {k: disp.labels(phase=k)
+                        for k in ("prefill", "decode")}
         # prefill token traffic (paged engine): "shared" counts prompt
         # tokens whose K/V came from attaching resident prefix blocks —
         # never recomputed, never rewritten. serve_bench turns the split
-        # into modeled prefill HBM bytes saved by copy-on-write sharing.
-        self.prefill_traffic = {"tokens_total": 0, "tokens_prefilled": 0,
-                                "tokens_shared": 0}
+        # into modeled prefill HBM bytes saved by copy-on-write sharing;
+        ptok = self.obs.counter("serve.prefill.tokens",
+                                help="prompt tokens by provenance")
+        self._c_prefill = {f"tokens_{k}": ptok.labels(kind=k)
+                           for k in ("total", "prefilled", "shared")}
         # per-decode-step KV-traffic model (paged engine): the gather path
         # reads n_slots × view_len K/V rows per layer, the paged kernel
         # reads each active slot's blocks. "live" counts attended
         # positions (pos + 1), "resident" block-rounds them — serve_bench
         # turns these into modeled HBM bytes for the two attn_kernel paths.
-        self.kv_traffic = {"steps": 0, "gather_tokens": 0, "live_tokens": 0,
-                           "resident_tokens": 0, "active_slots": 0}
+        self._c_kv = {k: self.obs.counter(f"serve.kv.{k}")
+                      for k in ("steps", "gather_tokens", "live_tokens",
+                                "resident_tokens", "active_slots")}
+        self._c_done = self.obs.counter("serve.requests.completed")
+        self._c_sub = self.obs.counter("serve.requests.submitted")
+        # latency histograms, one per clock (the obs contract: assert on
+        # ticks, report both). Unit tick buckets make the SLO harness's
+        # bucket percentiles EXACT for tick-valued TTFTs.
+        self._h_ttft = self.obs.histogram(
+            "serve.ttft_ticks", buckets=obs_metrics.tick_buckets(),
+            help="time to first token, engine clock ticks")
+        self._h_ttft_ms = self.obs.histogram(
+            "serve.ttft_wall_ms", buckets=obs_metrics.ms_buckets(),
+            help="time to first token, wall ms from submit")
+        self._h_e2e = self.obs.histogram(
+            "serve.e2e_ticks", buckets=obs_metrics.tick_buckets(),
+            help="arrival to completion, engine clock ticks")
+        # read-only dict-shaped views, name-for-name with the dicts they
+        # replaced (PR 2/5/6 API) — reads stay valid, writes now raise
+        self._dispatches_view = obs_metrics.MetricView(self._c_disp)
+        self._prefill_view = obs_metrics.MetricView(self._c_prefill)
+        self._kv_view = obs_metrics.MetricView(self._c_kv)
+
+    # -- legacy counter-dict views + measurement reset ------------------------
+    @property
+    def dispatches(self) -> obs_metrics.MetricView:
+        """Read-only view over ``serve.dispatches{phase=...}``."""
+        return self._dispatches_view
+
+    @property
+    def prefill_traffic(self) -> obs_metrics.MetricView:
+        """Read-only view over ``serve.prefill.tokens{kind=...}``."""
+        return self._prefill_view
+
+    @property
+    def kv_traffic(self) -> obs_metrics.MetricView:
+        """Read-only view over the ``serve.kv.*`` counters."""
+        return self._kv_view
+
+    def reset_metrics(self) -> None:
+        """Zero every obs instrument plus the derived measurement state
+        (step counter, tick clock, completed list) — what a bench does
+        after jit warmup. Live requests are untouched; call while idle."""
+        self.obs.reset()
+        self._steps = 0
+        self.clock = 0
+        self.completed.clear()
 
     def _run(self, fn, *args):
         if self.mesh is None:
@@ -212,7 +299,9 @@ class ServeEngine:
                     f"{usable}: raise n_blocks or shorten the prompt")
         self._uid += 1
         req = Request(self._uid, list(prompt), max_new_tokens,
-                      arrival=int(arrival or 0))
+                      arrival=int(arrival or 0),
+                      wall_arrival=time.perf_counter())
+        self._c_sub.inc()
         if self.paged:
             self.sched.submit(req)
         else:
@@ -222,7 +311,42 @@ class ServeEngine:
     def _complete(self, req: Request) -> None:
         req.done = True
         req.t_done = self.clock
+        req.wall_done = time.perf_counter()
         self.completed.append(req)
+        self._c_done.inc()
+        if req.t_first is not None:
+            self._h_ttft.observe(req.t_first - req.arrival)
+            if req.wall_first is not None and req.wall_arrival is not None:
+                self._h_ttft_ms.observe(
+                    (req.wall_first - req.wall_arrival) * 1e3)
+        self._h_e2e.observe(req.t_done - req.arrival)
+        if self.trace.enabled:
+            self._trace_request(req)
+
+    def _trace_request(self, req: Request) -> None:
+        """Emit the request's lifecycle on the TICK timeline (one lane per
+        uid, 1 tick = TICK_US us): queued [arrival, t_admit) → prefill
+        [t_admit, t_first) → decode [t_first, t_done). Span geometry
+        reproduces the tick TTFT exactly ((prefill.ts + prefill.dur) -
+        queued.ts == TTFT·TICK_US); the args carry both clocks."""
+        k = obs_trace.TICK_US
+        ta = req.t_admit if req.t_admit is not None else req.arrival
+        tf = req.t_first if req.t_first is not None else ta
+        ttft_ms = None
+        if req.wall_first is not None and req.wall_arrival is not None:
+            ttft_ms = round((req.wall_first - req.wall_arrival) * 1e3, 3)
+        args = {"uid": req.uid, "arrival_tick": req.arrival,
+                "t_first_tick": tf, "t_done_tick": req.t_done,
+                "ttft_ticks": tf - req.arrival, "ttft_wall_ms": ttft_ms}
+        self.trace.thread_name(req.uid, f"request {req.uid}")
+        self.trace.event("queued", ts_us=req.arrival * k,
+                         dur_us=(ta - req.arrival) * k, tid=req.uid,
+                         cat="request", args=args)
+        self.trace.event("prefill", ts_us=ta * k, dur_us=(tf - ta) * k,
+                         tid=req.uid, cat="request", args=args)
+        self.trace.event("decode", ts_us=tf * k,
+                         dur_us=(req.t_done - tf) * k, tid=req.uid,
+                         cat="request", args=args)
 
     # -- paged path ---------------------------------------------------------
     def _admit_paged(self, now: Optional[int] = None) -> None:
@@ -234,17 +358,20 @@ class ServeEngine:
         None (drain-style entry points) admits anything queued."""
         if self._parked and self.sched.active_slots:
             return
-        admitted = self.sched.admit(now)
+        with self.trace.span("serve.admission", cat="engine"):
+            admitted = self.sched.admit(now)
         if not admitted:
             return
+        t_admit, wall_admit = self.clock, time.perf_counter()
         tokens, lengths, offsets, table = self.sched.build_prefill(admitted)
-        pt = self.prefill_traffic
+        pt = self._c_prefill
         for s, req in admitted:
+            req.t_admit, req.wall_admit = t_admit, wall_admit
             n = len(req.prompt if req.resume is None else req.resume)
-            pt["tokens_total"] += n
-            pt["tokens_prefilled"] += n - int(offsets[s])
-            pt["tokens_shared"] += int(offsets[s])
-        self.dispatches["prefill"] += 1
+            pt["tokens_total"].inc(n)
+            pt["tokens_prefilled"].inc(n - int(offsets[s]))
+            pt["tokens_shared"].inc(int(offsets[s]))
+        self._c_disp["prefill"].inc()
         self.clock += 1
         args = (self.params, self.consts, jnp.asarray(tokens), self.cache,
                 jnp.asarray(lengths), jnp.asarray(table))
@@ -254,14 +381,19 @@ class ServeEngine:
             # offsets are identically 0 and the legacy whole-prompt trace
             # is kept — no recompile, no behavior change
             args += (None, jnp.asarray(offsets))
-        first, _, self.cache = self._run(self._prefill_fn, *args)
-        first = np.asarray(first)
+        with self.trace.span("serve.prefill_dispatch", cat="engine",
+                             slots=len(admitted)):
+            first, _, self.cache = self._run(self._prefill_fn, *args)
+        with self.trace.span("serve.block_until_ready", cat="engine"):
+            first = np.asarray(first)
+        wall_first = time.perf_counter()
         self.sched.finish_prefill(admitted)
         for s, req in admitted:
             tok = int(first[s, 0])
             if req.resume is None:
                 req.out = [tok]
                 req.t_first = self.clock
+                req.wall_first = wall_first
             else:
                 # recompute after preemption: the re-prefilled context is
                 # prompt + out, so this sample regenerates the token the
@@ -307,20 +439,23 @@ class ServeEngine:
         for s in active:
             tok[s, 0] = self.sched.slot_req[s].out[-1]
         pos_vec = self.sched.decode_positions()
-        t = self.kv_traffic
-        t["steps"] += 1
-        t["gather_tokens"] += self.n_slots * self.layout.view_len
-        t["live_tokens"] += sum(int(self.sched.pos[s]) + 1 for s in ready)
-        t["resident_tokens"] += sum(self.sched.blocks.alloc_tokens(s)
-                                    for s in ready)
-        t["active_slots"] += len(ready)
-        self.dispatches["decode"] += 1
+        t = self._c_kv
+        t["steps"].inc()
+        t["gather_tokens"].inc(self.n_slots * self.layout.view_len)
+        t["live_tokens"].inc(sum(int(self.sched.pos[s]) + 1 for s in ready))
+        t["resident_tokens"].inc(sum(self.sched.blocks.alloc_tokens(s)
+                                     for s in ready))
+        t["active_slots"].inc(len(ready))
+        self._c_disp["decode"].inc()
         self.clock += 1
-        nxt, _, self.cache = self._run(
-            self._decode_fn, self.params, self.consts, jnp.asarray(tok),
-            self.cache, jnp.asarray(pos_vec),
-            jnp.asarray(self.sched.table()))
-        nxt = np.asarray(nxt)
+        with self.trace.span("serve.decode_dispatch", cat="engine",
+                             slots=len(ready)):
+            nxt, _, self.cache = self._run(
+                self._decode_fn, self.params, self.consts, jnp.asarray(tok),
+                self.cache, jnp.asarray(pos_vec),
+                jnp.asarray(self.sched.table()))
+        with self.trace.span("serve.block_until_ready", cat="engine"):
+            nxt = np.asarray(nxt)
         self._steps += 1
         for s in sorted(ready):
             req = self.sched.slot_req[s]
@@ -340,18 +475,23 @@ class ServeEngine:
         ``req.out`` (the request's first generated token), matching the
         paged prefill's semantics."""
         self.pos[slot] = 0
+        req.t_admit, req.wall_admit = self.clock, time.perf_counter()
         nxt = None
         for t in req.prompt:
             tok = np.zeros((self.n_slots, 1), np.int32)
             tok[slot, 0] = t
-            self.dispatches["prefill"] += 1
+            self._c_prefill["tokens_total"].inc()
+            self._c_prefill["tokens_prefilled"].inc()
+            self._c_disp["prefill"].inc()
             self.clock += 1
-            nxt, _, self.cache = self._run(
-                self._decode_fn, self.params, self.consts, jnp.asarray(tok),
-                self.cache, jnp.int32(self.pos[slot]))
+            with self.trace.span("serve.prefill_dispatch", cat="engine"):
+                nxt, _, self.cache = self._run(
+                    self._decode_fn, self.params, self.consts,
+                    jnp.asarray(tok), self.cache, jnp.int32(self.pos[slot]))
             self.pos[slot] += 1
         req.out = [int(np.asarray(nxt)[slot, 0])]
         req.t_first = self.clock
+        req.wall_first = time.perf_counter()
 
     def _refill(self) -> None:
         for s in range(self.n_slots):
@@ -377,12 +517,15 @@ class ServeEngine:
         # slot's K/V is written at that offset — the wart the paged path's
         # per-slot index vector removes).
         idx = int(max(self.pos[s] for s in active))
-        self.dispatches["decode"] += 1
+        self._c_disp["decode"].inc()
         self.clock += 1
-        nxt, _, self.cache = self._run(
-            self._decode_fn, self.params, self.consts, jnp.asarray(tok),
-            self.cache, jnp.int32(idx))
-        nxt = np.asarray(nxt)
+        with self.trace.span("serve.decode_dispatch", cat="engine",
+                             slots=len(active)):
+            nxt, _, self.cache = self._run(
+                self._decode_fn, self.params, self.consts, jnp.asarray(tok),
+                self.cache, jnp.int32(idx))
+        with self.trace.span("serve.block_until_ready", cat="engine"):
+            nxt = np.asarray(nxt)
         self._steps += 1
         for s in active:
             req = self.slot_req[s]

@@ -36,6 +36,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.serve.kv import BlockTable, PagedLayout, blocks_for
 
 
@@ -59,7 +60,8 @@ class Scheduler:
 
     def __init__(self, n_slots: int, max_len: int, layout: PagedLayout,
                  *, min_prefill_bucket: int = 8,
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False,
+                 obs: Optional[obs_metrics.Registry] = None):
         self.n_slots = n_slots
         self.max_len = max_len
         self.blocks = BlockTable(layout, n_slots)
@@ -71,6 +73,16 @@ class Scheduler:
         # tokens the shared-prefix attach skipped prefilling for, per slot
         # (engine folds them into its prefill traffic model at admission)
         self._shared = np.zeros(n_slots, np.int32)
+        # scheduler-level obs: the engine passes its registry so queue
+        # pressure, admission batch shaping, and preemptions land in the
+        # same snapshot as the engine counters
+        self.obs = obs if obs is not None else obs_metrics.Registry()
+        self._g_queue = self.obs.gauge(
+            "serve.sched.queue_depth", help="queued requests after admit")
+        self._h_admit = self.obs.histogram(
+            "serve.sched.admitted_batch", buckets=range(1, n_slots + 1),
+            help="requests admitted per batched prefill")
+        self._c_preempt = self.obs.counter("serve.sched.preemptions")
 
     # -- admission ------------------------------------------------------------
     def submit(self, req) -> None:
@@ -125,6 +137,9 @@ class Scheduler:
             self.slot_req[s] = req
             self.pos[s] = 0
             admitted.append((s, req))
+        if admitted:
+            self._h_admit.observe(len(admitted))
+        self._g_queue.set(len(self.queue))
         return admitted
 
     def build_prefill(self, admitted) -> Tuple[np.ndarray, np.ndarray,
@@ -195,6 +210,7 @@ class Scheduler:
     def evict(self, slot: int):
         """Preempt ``slot``: free its blocks and hand its request back to
         the engine (which requeues it for recompute)."""
+        self._c_preempt.inc()
         req = self.slot_req[slot]
         self.blocks.release(slot)
         self.slot_req[slot] = None

@@ -38,17 +38,32 @@ stacked gradient is accumulated through the sweep (as scan outputs) and
 updated once at the end, exactly like global mode. These are the small
 leaves (norms, odd-sized supports); the big matrices slice.
 
-Tied embeddings are supported but carry the head's embed cotangent
-(V × d f32) across the sweep — the paper's LLaMA configs are untied.
+Tied embeddings are supported without widening the sweep's working set:
+the head vjp closes the tied embedding over as a CONSTANT (so the
+boundary cotangent is the only thing carried through the layers), and
+the head's embed cotangent is recomputed by a dedicated embed-only vjp
+at the embed step of each pass — one extra head recompute instead of
+holding a V × d f32 cotangent across every layer.
+
+With ``layer_timing`` (an ``obs.metrics.Registry``), the update sweep
+stamps a host clock between layer updates via ordered
+``jax.experimental.io_callback`` — per-layer update wall time lands in
+the ``train.perlayer.layer_update_ms`` histogram (n_layers observations
+per step; zero overhead when disabled).
 """
 from __future__ import annotations
 
+import time
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+from jax.experimental import io_callback
 
 from repro.configs.base import ModelConfig
 from repro.models.common import remat_wrap
 from repro.models.registry import ModelApi
+from repro.obs import metrics as obs_metrics
 from repro.optim.optimizers import Optimizer
 from repro.train.step import cross_entropy
 
@@ -70,14 +85,21 @@ def _sq(tree):
 def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
                              optimizer: Optimizer, *, remat: str = "none",
                              grad_accum: int = 1, aux_coef: float = 0.01,
-                             fused_opt: bool | None = None):
+                             fused_opt: bool | None = None,
+                             layer_timing: Optional[
+                                 obs_metrics.Registry] = None):
     """Returns train_step(params, opt_state, consts, batch) ->
     (params, opt_state, metrics) with per-layer in-sweep updates.
 
     ``fused_opt`` routes sliced updates through
     ``optimizer.update_slice_fused`` (the Pallas adam8bit kernel) when the
     optimizer provides it; default follows the model's exec mode
-    (``cfg.param.exec_mode == "fused"``)."""
+    (``cfg.param.exec_mode == "fused"``).
+
+    ``layer_timing`` (a registry, or None = off) turns on per-layer update
+    timing: the update sweep hops to host between layer updates
+    (ordered ``io_callback``) and records the elapsed wall time per layer
+    into ``train.perlayer.layer_update_ms``."""
     if grad_accum != 1:
         raise ValueError("update_mode='per_layer' does not compose with "
                          "grad_accum > 1 yet — the microbatch scan would "
@@ -102,16 +124,36 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
     aux_ct = jnp.float32(aux_coef)
     tied = cfg.tie_embeddings
 
+    # -- optional per-layer update timing (host hop via io_callback) ------
+    if layer_timing is not None:
+        _h_layer = layer_timing.histogram(
+            "train.perlayer.layer_update_ms",
+            buckets=obs_metrics.ms_buckets(),
+            help="wall time between consecutive in-sweep layer updates")
+        _t_prev = {"ns": 0}
+
+        def _stamp_start():
+            _t_prev["ns"] = time.perf_counter_ns()
+
+        def _stamp_layer():
+            now = time.perf_counter_ns()
+            _h_layer.observe((now - _t_prev["ns"]) / 1e6)
+            _t_prev["ns"] = now
+
     def head_params_of(params):
+        """Only the UNTIED head leaves — the tied embedding enters
+        head_ce as a separate argument so the sweep can treat it as a
+        constant (see the tied-embeddings note in the module docstring)."""
         hp = {"ln_f": params["ln_f"]}
-        if tied:
-            hp["embed"] = params["embed"]
-        else:
+        if not tied:
             hp["lm_head"] = params["lm_head"]
         return hp
 
-    def head_ce(hp, h_top, tokens):
-        logits = plapi.head(cfg, hp, h_top)
+    def head_ce(hp, emb, h_top, tokens):
+        full = dict(hp)
+        if tied:
+            full["embed"] = emb
+        logits = plapi.head(cfg, full, h_top)
         return cross_entropy(logits[:, :-1], tokens[:, 1:], cfg.vocab_size)
 
     def stack_fns(group):
@@ -171,6 +213,10 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
                 else:
                     new_p.append(p_leaves[j])
                     res_g.append(g_leaves[j].astype(jnp.float32))
+            if layer_timing is not None:
+                # ordered host hop: stamps when execution reaches this
+                # point in the sweep, so deltas are per-layer update time
+                io_callback(_stamp_layer, None, ordered=True)
             return dx, (tuple(new_p), tuple(new_ls), tuple(res_g))
 
         if norm_pass:
@@ -221,17 +267,28 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
             aux_total = aux_total + bnd["aux_dense"].sum()
         aux_total = aux_total + bnd["aux"].sum()
 
+        # tied: embed enters the head as a closed-over constant — the
+        # head vjp then yields only untied-leaf + boundary cotangents,
+        # and the embed's head cotangent is recomputed at the embed step
+        # (head_embed_cotangent) instead of being carried down the sweep
+        emb0 = params["embed"] if tied else None
         hp = head_params_of(params)
         ce, head_pull = jax.vjp(
-            lambda hp_, h_: head_ce(hp_, h_, tokens), hp, bnd["h_top"])
+            lambda hp_, h_: head_ce(hp_, emb0, h_, tokens), hp,
+            bnd["h_top"])
         loss = ce + aux_coef * aux_total
+
+        def head_embed_cotangent():
+            _, pull = jax.vjp(
+                lambda e: head_ce(hp, e, bnd["h_top"], tokens),
+                params["embed"])
+            return pull(jnp.float32(1.0))[0]
 
         def emb_fn(ep):
             return plapi.embed(cfg, ep, tokens, patches)
 
         # ---- pass 1: exact global grad norm (LOMO-style norm sweep) -----
         d_head, dh = head_pull(jnp.float32(1.0))
-        d_emb_top = d_head.pop("embed", None)  # tied: fold in at the bottom
         total_sq = _sq(d_head)
         dh1 = dh
         if "layers" in params:
@@ -244,8 +301,8 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
             total_sq = total_sq + acc
         _, emb_pull = jax.vjp(emb_fn, {"embed": params["embed"]})
         d_embed = emb_pull(dh1)[0]["embed"]
-        if d_emb_top is not None:
-            d_embed = d_embed.astype(jnp.float32) + d_emb_top
+        if tied:
+            d_embed = d_embed.astype(jnp.float32) + head_embed_cotangent()
         total_sq = total_sq + _sq(d_embed)
         gnorm = jnp.sqrt(total_sq)
 
@@ -253,9 +310,10 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
         ctx, stats = optimizer.prepare(opt_state, gnorm)
         state = opt_state
         new_params = dict(params)
+        if layer_timing is not None:
+            io_callback(_stamp_start, None, ordered=True)
 
         d_head, dh = head_pull(jnp.float32(1.0))
-        d_emb_top = d_head.pop("embed", None)
         for key, g in d_head.items():
             ls = optimizer.leaf_state(state, (key,))
             np_, nls = upd_full(ctx, params[key], g, ls)
@@ -271,8 +329,8 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
                 state)
 
         d_embed = emb_pull(dh)[0]["embed"]
-        if d_emb_top is not None:
-            d_embed = d_embed.astype(jnp.float32) + d_emb_top
+        if tied:
+            d_embed = d_embed.astype(jnp.float32) + head_embed_cotangent()
         ls = optimizer.leaf_state(state, ("embed",))
         np_, nls = upd_full(ctx, params["embed"], d_embed, ls)
         new_params["embed"] = np_

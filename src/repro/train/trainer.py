@@ -24,11 +24,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import roofline
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import TrainConfig
 from repro.core import relora as relora_lib
 from repro.data.pipeline import SyntheticC4
 from repro.models import registry
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.optim import optimizers
 from repro.train import step as step_lib
 
@@ -120,7 +123,11 @@ class StepTimeWatchdog:
 
 class Trainer:
     def __init__(self, tc: TrainConfig, *, mesh=None, log_fn=print,
-                 fault_hook: Optional[Callable[[int], None]] = None):
+                 fault_hook: Optional[Callable[[int], None]] = None,
+                 obs: Optional[obs_metrics.Registry] = None,
+                 trace: Optional[obs_trace.Trace] = None,
+                 metrics_out: Optional[str] = None,
+                 layer_timing: bool = False):
         self.tc = tc
         self.mesh = mesh
         self.log = log_fn
@@ -135,12 +142,40 @@ class Trainer:
         self._preempted = False
         self.metrics_history: List[Dict[str, float]] = []
 
+        # -- observability (repro.obs): own registry per trainer so
+        # side-by-side runs (sweeps, tests) never share counters; pass a
+        # shared one to aggregate. Trace defaults disabled = no-op spans.
+        self.obs = obs if obs is not None else obs_metrics.Registry()
+        self.trace = trace if trace is not None \
+            else obs_trace.Trace(enabled=False)
+        self.metrics_out = metrics_out
+        self._chips = 1 if mesh is None else int(mesh.devices.size)
+        self._c_steps = self.obs.counter("train.steps")
+        self._c_tokens = self.obs.counter(
+            "train.tokens", help="tokens consumed (global batch x seq)")
+        self._g_loss = self.obs.gauge("train.loss")
+        self._g_lr = self.obs.gauge("train.lr")
+        self._g_gnorm = self.obs.gauge("train.grad_norm")
+        self._g_tps = self.obs.gauge(
+            "train.tokens_per_sec", help="tokens / (dispatch + sync) time")
+        self._g_mfu = self.obs.gauge(
+            "train.mfu", help="6ND model-FLOPs utilisation vs chip peak "
+            "(analysis.roofline.train_mfu)")
+        self._h_step = self.obs.histogram(
+            "train.step_ms", buckets=obs_metrics.ms_buckets())
+        phase_h = self.obs.histogram(
+            "train.phase_ms", buckets=obs_metrics.ms_buckets(),
+            help="per-step phase split: data | dispatch | sync")
+        self._h_phase = {k: phase_h.labels(phase=k)
+                         for k in ("data", "dispatch", "sync")}
+
         if tc.sharding.update_mode == "per_layer":
             from repro.train import perlayer
             self._train_step = jax.jit(perlayer.make_perlayer_train_step(
                 self.cfg, self.api, self.optimizer,
                 remat=tc.sharding.remat,
-                grad_accum=tc.sharding.grad_accum))
+                grad_accum=tc.sharding.grad_accum,
+                layer_timing=self.obs if layer_timing else None))
         elif tc.sharding.update_mode == "global":
             self._train_step = jax.jit(step_lib.make_train_step(
                 self.cfg, self.api, self.optimizer,
@@ -221,17 +256,35 @@ class Trainer:
             state = self.restore_or_init()
         state = self._place(state)
         self._install_signal_handlers()
+        tokens_per_step = tc.global_batch * tc.seq_len
         while state.step < total:
             if self.fault_hook:
                 self.fault_hook(state.step)  # test hook: may raise/kill
-            batch_np = self.data.next_batch()
-            batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
-            t0 = time.perf_counter()
-            with self._mesh_ctx():
-                params, opt_state, metrics = self._train_step(
-                    state.params, state.opt_state, state.consts, batch)
-            jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
+            with self.trace.span("train.step", cat="train",
+                                 step=state.step + 1):
+                t0 = time.perf_counter()
+                with self.trace.span("train.data", cat="train"):
+                    batch_np = self.data.next_batch()
+                    batch = {k: jax.numpy.asarray(v)
+                             for k, v in batch_np.items()}
+                t1 = time.perf_counter()
+                with self._mesh_ctx(), \
+                        self.trace.span("train.dispatch", cat="train"):
+                    params, opt_state, metrics = self._train_step(
+                        state.params, state.opt_state, state.consts, batch)
+                t2 = time.perf_counter()
+                with self.trace.span("train.sync", cat="train"):
+                    jax.block_until_ready(metrics["loss"])
+                t3 = time.perf_counter()
+            # dt keeps its historical meaning: dispatch + sync (excludes
+            # host-side data work) — the watchdog/history currency
+            dt = t3 - t1
+            self._h_phase["data"].observe((t1 - t0) * 1e3)
+            self._h_phase["dispatch"].observe((t2 - t1) * 1e3)
+            self._h_phase["sync"].observe((t3 - t2) * 1e3)
+            self._h_step.observe(dt * 1e3)
+            self._c_steps.inc()
+            self._c_tokens.inc(tokens_per_step)
             state = TrainerState(params, opt_state, state.consts,
                                  state.step + 1)
             if self._relora_merge is not None and \
@@ -247,10 +300,26 @@ class Trainer:
             row = {k: float(v) for k, v in metrics.items()}
             row.update(step=state.step, dt=dt)
             self.metrics_history.append(row)
+            self._g_loss.set(row["loss"])
+            if "lr" in row:
+                self._g_lr.set(row["lr"])
+            if "grad_norm" in row:
+                self._g_gnorm.set(row["grad_norm"])
+            self._g_tps.set(tokens_per_step / dt if dt > 0 else 0.0)
+            self._g_mfu.set(roofline.train_mfu(self.cfg, tokens_per_step,
+                                               dt, self._chips))
             if state.step % tc.log_every == 0 or state.step == total:
-                self.log(f"[step {state.step:5d}] loss={row['loss']:.4f} "
-                         f"lr={row.get('lr', 0):.2e} {dt*1e3:.0f}ms"
+                # log line reads back from the registry — the gauges ARE
+                # the trainer's reporting surface, not a side channel
+                self.log(f"[step {state.step:5d}] "
+                         f"loss={self._g_loss.value:.4f} "
+                         f"lr={self._g_lr.value or 0:.2e} {dt*1e3:.0f}ms "
+                         f"{self._g_tps.value:.0f}tok/s "
+                         f"mfu={self._g_mfu.value:.4f}"
                          + (" STRAGGLER" if slow else ""))
+                if self.metrics_out:
+                    self.obs.write_jsonl(self.metrics_out,
+                                         extra={"step": state.step})
             if self._preempted:
                 self.log("[trainer] preemption signal: checkpoint + exit 42")
                 self.save(state, background=False)
