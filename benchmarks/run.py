@@ -9,7 +9,7 @@ Each benchmark's rows are additionally snapshotted to a machine-readable
 the perf trajectory is diffable across PRs instead of living in
 CHANGES.md prose. Related benches share a group file (the two serve
 benches → BENCH_serve.json, the two train-step benches →
-BENCH_train_step.json); everything else snapshots under its own name.
+BENCH_train.json); everything else snapshots under its own name.
 Snapshots are ``{"meta": {...}, "rows": [...]}`` — the meta header
 (git sha + commit count, UTC timestamp, jax version, device kind) makes
 each number attributable to the exact tree and machine that produced it.
@@ -66,8 +66,8 @@ def _snapshot_meta() -> dict:
 SNAPSHOT_GROUPS = {
     "serve_decode_traffic": "serve",
     "serve_slo": "serve",
-    "train_step_fused": "train_step",
-    "train_step_perlayer": "train_step",
+    "train_step_fused": "train",
+    "train_step_perlayer": "train",
 }
 
 

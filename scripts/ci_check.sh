@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # One-command regression gate: tier-1 tests + core smoke + a host-mesh
-# dry-run through the repro.dist spec engine + paged serve smokes
-# (gathered-view and paged-attention-kernel decode). Run from anywhere.
+# dry-run through the repro.dist spec engine + the 2-device host-mesh
+# smoke (compressed-DP, per_layer x grad_accum, distributed fused) + the
+# llama_7b fsdp placement gate + paged serve smokes (gathered-view and
+# paged-attention-kernel decode). Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -29,6 +31,12 @@ python scripts/smoke_core.py
 
 echo "== dry-run: llama_60m x train_4k on the 256-chip host mesh =="
 python -m repro.launch.dryrun --arch llama_60m --cell train_4k
+
+echo "== host-mesh smoke: compressed-DP + wire model, per_layer+grad_accum=2, fused TP=2 =="
+python scripts/hostmesh_smoke.py
+
+echo "== fsdp gate: llama_7b placement residency + lower on the 8-device host mesh =="
+python scripts/fsdp_dryrun.py
 
 echo "== fused smoke: exec_mode=fused 3-step train on the Pallas path =="
 python -m repro.launch.train --arch llama_60m --smoke --mode sltrain \

@@ -203,8 +203,35 @@ class ShardingConfig:
     RUNS, update_mode picks how its gradients are CONSUMED. Under
     per_layer + exec_mode="fused", sliced adam8bit updates dispatch to the
     fused Pallas kernel (kernels/adam8bit.py) instead of the XLA
-    reference. per_layer currently requires grad_accum == 1 and an
-    lm-family model (the PerLayerApi in models/registry.py).
+    reference. per_layer requires an lm-family model (the PerLayerApi in
+    models/registry.py); grad_accum > 1 runs the in-sweep microbatch
+    accumulator (per-layer grads accumulate across microbatches inside
+    the reverse sweep — the full gradient tree is never materialized).
+
+    ``fsdp`` additionally shards parameters and optimizer state over
+    ``fsdp_axis`` (the data axis): the spec engine appends the fsdp axes
+    to the first matrix dim they divide, composing with the TP rules
+    without ever using a mesh axis twice (dist/sharding.py); grads are
+    pinned back to the sharded layout before the update (reduce-scatter
+    instead of all-reduce + slice). Support matrix
+    (update_mode × exec_mode × fsdp — all 12 combinations lower):
+
+      update_mode  exec_mode      fsdp=False          fsdp=True
+      global       dense/sparse   baseline            params/opt 1/N_data
+      global       fused          Pallas tile kernels tile consts shard the
+                                  (replicated consts) d_out tile axis over
+                                                      model; params/opt
+                                                      shard over data
+      per_layer    dense/sparse   O(P_layer) grads    sliced grads pinned
+                                                      to the layout the
+                                                      stacked leaf shards
+      per_layer    fused          fused adam8bit      both compose: the
+                                  slices              sweep slices the
+                                                      layer dim, fsdp
+                                                      shards matrix dims
+
+    grad_accum composes with every row (global: microbatch scan;
+    per_layer: in-sweep accumulator).
     """
     batch_axes: Tuple[str, ...] = ("pod", "data")
     model_axis: str = "model"
@@ -217,20 +244,6 @@ class ShardingConfig:
     pod_grad_compression: bool = False
     # shard KV cache sequence dim over the model axis for long-context decode
     seq_shard_decode: bool = False
-
-    def __post_init__(self):
-        if self.update_mode == "per_layer" and self.grad_accum > 1:
-            # fail at CONFIG time: letting this through would silently
-            # re-materialize the full gradient tree in the microbatch scan
-            # — exactly the O(P_trainable) residency per_layer exists to
-            # avoid (ROADMAP "per_layer × grad_accum"; the in-sweep
-            # accumulator has not landed yet)
-            raise ValueError(
-                "update_mode='per_layer' does not compose with "
-                f"grad_accum={self.grad_accum}: the microbatch scan would "
-                "re-materialize the full gradient tree the mode exists to "
-                "avoid. Keep grad_accum == 1 (raise global_batch instead) "
-                "until the in-sweep accumulator lands.")
 
 
 @dataclass(frozen=True)

@@ -203,7 +203,8 @@ def training_estimate(inventory: List[MatrixInfo], method: str, *,
                       delta: float = 0.03, dtype_bytes: int = 2,
                       index_bytes: int = 8, q_block: int = 256,
                       support_kind: str = "iid", fused_opt: bool = False,
-                      galore_rank: int | None = None) -> TrainMemoryEstimate:
+                      galore_rank: int | None = None,
+                      moment_bytes: int | None = None) -> TrainMemoryEstimate:
     """Training-state memory = params + grads + optimizer state +
     optimizer f32 transients, under an optimizer × update_mode choice.
 
@@ -217,6 +218,13 @@ def training_estimate(inventory: List[MatrixInfo], method: str, *,
     (kernels/adam8bit.py): the dequantized f32 m/v exist only per-tile in
     VMEM, so the HBM transient term drops to 0; the XLA reference
     round-trips the update group's f32 moments through HBM.
+
+    ``moment_bytes`` overrides the per-element size of the adamw m/v
+    state. The paper's Appendix-F convention keeps bf16 moments
+    (``dtype_bytes``, the default); this framework's adamw
+    (optim/optimizers.py) allocates f32 moments regardless of param
+    dtype, so gates that compare against MEASURED device residency
+    (scripts/fsdp_dryrun.py) pass ``moment_bytes=4``.
     """
     base = estimate(inventory, method, rank=rank, delta=delta,
                     dtype_bytes=dtype_bytes, index_bytes=index_bytes,
@@ -245,7 +253,8 @@ def training_estimate(inventory: List[MatrixInfo], method: str, *,
         optim_bytes = 2.0 * t * 1 + 2.0 * (t / q_block) * 4
         transient_bytes = 0.0 if fused_opt else 8.0 * resident
     elif optimizer == "adamw":
-        optim_bytes = base.optim_bytes     # paper convention: bf16 moments
+        # paper convention: bf16 moments (moment_bytes=None keeps it)
+        optim_bytes = 2.0 * t * (moment_bytes or dtype_bytes)
         transient_bytes = 0.0
     elif optimizer == "galore_adamw":
         optim_bytes = base.optim_bytes if method == "galore" else \

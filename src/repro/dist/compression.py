@@ -83,17 +83,43 @@ def wire_bytes(n_elems: int, *, compressed: bool, n_participants: int,
 
 
 def psum_tree(tree, axis_name: str, *, compress: bool = True,
-              block: int = 256, min_size: int = 1024):
+              block: int = 256, min_size: int = 1024,
+              obs=None, n_participants: int = 1):
     """psum every leaf of a pytree over ``axis_name``.
 
     With ``compress=True``, float leaves of at least ``min_size`` elements
     go through :func:`int8_psum`; small leaves (norm gains, biases) and
     integer leaves stay exact — they are wire-negligible and precision
     matters most for them. Must be called inside ``shard_map``.
+
+    ``obs`` (an ``obs.metrics.Registry``) records the MODELED
+    per-participant wire bytes of every reduction on the
+    ``dist.collective_bytes`` counter, labeled ``compressed=true|false``.
+    The counters increment at trace time — once per compiled step, so
+    after the first step they read "wire bytes per traced step" (the
+    :func:`wire_bytes` model the HLO-validation test pins to measured
+    collectives); ``n_participants`` is the reduction's axis size, which
+    shard_map bodies cannot read off the traced mesh themselves.
     """
+    c_wire = None
+    if obs is not None:
+        c_wire = obs.counter(
+            "dist.collective_bytes",
+            help="modeled per-participant wire bytes of gradient "
+                 "reductions (dist.compression.wire_bytes), per traced "
+                 "step")
+
     def reduce_leaf(g):
-        if (compress and jnp.issubdtype(g.dtype, jnp.floating)
-                and g.size >= min_size):
+        comp = (compress and jnp.issubdtype(g.dtype, jnp.floating)
+                and g.size >= min_size)
+        if c_wire is not None:
+            dtype_bytes = jnp.dtype(g.dtype).itemsize \
+                if not comp else 4
+            c_wire.labels(compressed=str(comp).lower()).inc(
+                wire_bytes(g.size, compressed=comp,
+                           n_participants=n_participants,
+                           dtype_bytes=dtype_bytes, block=block))
+        if comp:
             return int8_psum(g, axis_name, block=block)
         return jax.lax.psum(g, axis_name)
 

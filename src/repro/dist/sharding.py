@@ -24,10 +24,20 @@ Placement policy (tensor-parallel output sharding + expert parallelism):
   over model: the gather in densify is row-local, so the support shards
   with zero cross-device index traffic;
 * fused-mode tile consts ``rows_t`` / ``cols_t`` / ``perm``
-  ``(nkt, nnt, cap)`` int32 — replicated (small index metadata; keeps the
-  Pallas tile addressing mesh-agnostic);
+  ``(nkt, nnt, cap)`` int32 — shard the ``nnt`` (d_out-tile) axis over
+  model, matching the A / dense-w output layout so the distributed fused
+  vjp reads only local column tiles;
 * expert-stacked MoE weights — shard the expert dim over model (EP);
 * norms / embeds / biases / routers — replicated.
+
+FSDP (``ShardingConfig.fsdp``): every spec function takes ``fsdp_axes``;
+when set, parameters and optimizer state additionally shard over the
+data axis — the fsdp axes are appended to the first matrix dim they
+divide, composing with the TP rules above without ever using a mesh axis
+twice. The matching schedule (all-gather params before use,
+reduce-scatter grads before the update) falls out of XLA SPMD once the
+train step pins its gradients back to these specs (train/step.py,
+train/perlayer.py).
 
 Every rule is guarded: an axis that does not divide the dim falls back to
 replication for that dim, never an error (heterogeneous archs × meshes).
@@ -178,11 +188,14 @@ def _base_spec(name: str, keys: Tuple[str, ...], trailing: Tuple[int, ...],
             return (_guard(trailing[0], mesh,    # shard d_in rows
                            model_axis),) + (None,) * (nd - 1)
         return (None,) * nd                      # iid COO (nnz,): replicate
-    # everything else — including the fused-mode tile consts rows_t /
-    # cols_t / perm (nkt, nnt, cap) int32 — is replicated: they are index
-    # metadata a few % the size of v, and replication keeps the Pallas
-    # tile addressing mesh-agnostic (their 3-D base rank comes from
-    # _MATRIX_NDIM so layer stacking is still recognized).
+    if name in ("rows_t", "cols_t", "perm") and nd == 3:
+        # fused-mode tile consts (nkt, nnt, cap) int32: shard the nnt
+        # (d_out-tile) axis over model, matching the A / dense-w output
+        # sharding — each TP shard then addresses only its own column
+        # tiles, and the distributed fused vjp (kernels/ops.py) consumes
+        # the local slice without an all-gather.
+        return (None, _guard(trailing[1], mesh, model_axis), None)
+    # everything else is replicated.
     return (None,) * nd
 
 
@@ -193,8 +206,30 @@ _MATRIX_NDIM = {"w": 2, "B": 2, "A": 2, "cols": 2, "v": 2, "W0": 2,
                 "rows_t": 3, "cols_t": 3, "perm": 3}
 
 
+def _append_fsdp(base, trailing, mesh, fsdp_axes, used):
+    """Append the fsdp axes to the FIRST trailing (matrix) dim they
+    divide, on top of whatever the TP rules already placed there — never
+    reusing a mesh axis (``used`` = axes the lead/base spec consumed).
+    Returns the augmented trailing spec, or ``base`` unchanged when no
+    dim can absorb them (replicate fallback, same contract as _guard)."""
+    axes = tuple(a for a in fsdp_axes
+                 if a in mesh.axis_names and a not in used)
+    if not axes:
+        return base
+    out = list(base)
+    for i, dim in enumerate(trailing):
+        cur = out[i] if isinstance(out[i], tuple) else (
+            (out[i],) if out[i] else ())
+        cand = cur + axes
+        if dim % max(axis_size(mesh, cand), 1) == 0:
+            out[i] = cand
+            return tuple(out)
+    return base
+
+
 def spec_for_param(path, leaf, mesh, *, model_axis: str = MODEL_AXIS,
-                   support_layout: Optional[str] = None) -> P:
+                   support_layout: Optional[str] = None,
+                   fsdp_axes: Tuple[str, ...] = ()) -> P:
     """PartitionSpec for one parameter/const leaf addressed by tree path.
 
     Handles the layer-stack convention (scan-over-layers prepends a layer
@@ -207,6 +242,13 @@ def spec_for_param(path, leaf, mesh, *, model_axis: str = MODEL_AXIS,
     ``"row_balanced"`` when known (:func:`param_specs` infers it from the
     presence of a sibling ``rows`` leaf); None assumes row-balanced, the
     repo default.
+
+    ``fsdp_axes`` (``ShardingConfig.fsdp``) additionally shards the leaf
+    over the data axis: the axes are appended to the first MATRIX dim
+    they divide, composing with (never displacing, never double-using)
+    the TP placement above. Leading layer/expert-stack dims stay
+    unsharded — the per-layer sweep slices them — so fsdp lands on the
+    within-layer matrix dims the TP rules left room on.
     """
     keys = _path_keys(path)
     name = keys[-1] if keys else ""
@@ -239,10 +281,16 @@ def spec_for_param(path, leaf, mesh, *, model_axis: str = MODEL_AXIS,
         base = (None,) * base_nd      # model axis already used for EP
     else:
         base = _base_spec(name, keys, trailing, mesh, model_axis)
+    if fsdp_axes and base_nd > 0:
+        used = set()
+        for s in tuple(lead) + tuple(base):
+            used.update(s if isinstance(s, tuple) else ((s,) if s else ()))
+        base = _append_fsdp(base, trailing, mesh, fsdp_axes, used)
     return P(*(tuple(lead) + tuple(base)))
 
 
-def param_specs(params, mesh, *, model_axis: str = MODEL_AXIS):
+def param_specs(params, mesh, *, model_axis: str = MODEL_AXIS,
+                fsdp_axes: Tuple[str, ...] = ()):
     """PartitionSpec pytree mirroring ``params`` (works on abstract trees)."""
     all_paths = {_path_keys(p) for p, _ in
                  jax.tree_util.tree_flatten_with_path(params)[0]}
@@ -256,7 +304,7 @@ def param_specs(params, mesh, *, model_axis: str = MODEL_AXIS):
             layout = ("iid" if keys[:-1] + ("rows",) in all_paths
                       else "row_balanced")
         return spec_for_param(path, leaf, mesh, model_axis=model_axis,
-                              support_layout=layout)
+                              support_layout=layout, fsdp_axes=fsdp_axes)
 
     return jax.tree_util.tree_map_with_path(spec, params)
 
@@ -274,12 +322,16 @@ def batch_specs(batch, mesh, batch_axes: Sequence[str] = BATCH_AXES):
     return jax.tree.map(spec, batch)
 
 
-def opt_state_specs(opt_state, p_specs, mesh):
+def opt_state_specs(opt_state, p_specs, mesh, *,
+                    fsdp_axes: Tuple[str, ...] = ()):
     """Specs for an optimizer-state tree.
 
     Moment trees that mirror the param tree (AdamW's mu/nu) inherit the
     param leaf's spec; quantized / projected state whose shapes diverge
-    (8-bit codes+scales, GaLore factors) and scalars are replicated.
+    (8-bit codes+scales, GaLore factors) and scalars are replicated —
+    except under fsdp, where those non-mirroring leaves shard their
+    leading dim over the fsdp axes when it divides (8-bit code/scale
+    blocks are per-leaf flat, so a dim-0 split is always slice-aligned).
     """
     by_path = {}
     for path, spec in jax.tree_util.tree_flatten_with_path(
@@ -292,6 +344,10 @@ def opt_state_specs(opt_state, p_specs, mesh):
             cand = by_path.get(keys[i:])
             if cand is not None and len(cand) <= leaf.ndim:
                 return cand
+        if fsdp_axes and leaf.ndim >= 1:
+            g = _guard(leaf.shape[0], mesh, tuple(fsdp_axes))
+            if g is not None:
+                return P(g, *([None] * (leaf.ndim - 1)))
         return P()
 
     return jax.tree_util.tree_map_with_path(spec, opt_state)
@@ -374,10 +430,14 @@ def constrain_boundary(x, *, seq_sharded: bool = False):
 
 def boundary_save_specs(xs, mesh, batch_axes: Sequence[str] = BATCH_AXES,
                         *, model_axis: str = MODEL_AXIS,
-                        seq_sharded: bool = False):
+                        seq_sharded: bool = False,
+                        fsdp_axes: Tuple[str, ...] = ()):
     """Specs for STACKED boundary saves (n_layers, B, S, d): layer dim
     replicated (the reverse sweep slices it layer by layer on every
-    device), batch over the batch axes, seq optionally over model (SP)."""
+    device), batch over the batch axes, seq optionally over model (SP).
+    Under fsdp, when the batch dim could NOT absorb the batch axes (tiny
+    per-host batches), the stacked layer dim shards over the fsdp axes
+    instead so the saves still split — never both (no axis reuse)."""
     axes = tuple(a for a in batch_axes if a in mesh.axis_names)
 
     def spec(leaf):
@@ -385,8 +445,15 @@ def boundary_save_specs(xs, mesh, batch_axes: Sequence[str] = BATCH_AXES,
             return P(*([None] * leaf.ndim))
         n_lead = leaf.ndim - 3
         b, s, _ = leaf.shape[n_lead:]
+        bt = _guard(b, mesh, axes)
         seq = _guard(s, mesh, model_axis) if seq_sharded else None
-        return P(*([None] * n_lead), _guard(b, mesh, axes), seq, None)
+        lead = [None] * n_lead
+        if fsdp_axes and n_lead >= 1:
+            rem = tuple(a for a in fsdp_axes if a not in (bt or ()))
+            g = _guard(leaf.shape[0], mesh, rem) if rem else None
+            if g is not None:
+                lead[0] = g
+        return P(*lead, bt, seq, None)
 
     return jax.tree.map(spec, xs)
 

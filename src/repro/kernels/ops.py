@@ -136,6 +136,86 @@ def sddmm(x, dy, rows_t, cols_t, *, bm: int = 128,
 # Fused SLTrain linear: pallas forward + pallas backward, custom VJP
 # ---------------------------------------------------------------------------
 
+def _fused_grads_dist(x, B, A, v_t, rows_t, cols_t, scale, dy):
+    """Distributed fused backward (the shard_map sibling of
+    ``core.sltrain._grads_distributed``, for ``exec_mode="fused"``).
+
+    Under pjit-auto with the tile consts sharded over model
+    (dist/sharding: rows_t/cols_t/perm shard their nnt axis like A's
+    d_out), the fused vjp's contractions would still make XLA assemble
+    full-width operands. Tile-CSR is naturally shardable on the column-
+    tile axis — a tile's indices are LOCAL to its 128×128 block, so a
+    model shard's (nkt, nnt/TP, cap) const slice addresses exactly its
+    own dy columns with no index arithmetic. The island runs the same
+    eq.-(2) algebra as ``_fused_grads`` on local slices and psums only
+    r- and tile-sized results:
+
+      tokens over (pod, data); d_out / A / tile consts over model:
+        dA  = psum_bt(scale · (x·B)ᵀ · dy_loc)      — stays model-sharded
+        dB  = psum_bt+model(scale · xᵀ · (dy_loc·A_locᵀ))
+        dv  = psum_bt(sddmm local tiles)            — stays model-sharded
+        dx  = psum_model(sl_matmul(dy_loc, A_locᵀ, Bᵀ, local tilesᵀ))
+
+    Returns (dx, dB, dA, dv_t f32) or None when the geometry doesn't
+    shard (no mesh, TP=1, misaligned dims, down-projection) — callers
+    fall back to the local path. Same try/except contract as the densify
+    island: composition must degrade, never error."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import compat, sharding as dist_sharding
+    mesh = dist_sharding.ambient_mesh()
+    if mesh is None or getattr(mesh, "empty", False) or x.ndim != 3 \
+            or dy.ndim != 3:
+        return None
+    d_in = x.shape[-1]
+    d_out = dy.shape[-1]
+    if d_in > d_out:
+        # island edge would gather the larger activation — the same wire
+        # heuristic as the densify path (§Perf it.9)
+        return None
+    axes = mesh.axis_names
+    bt = tuple(a for a in ("pod", "data") if a in axes)
+    nb = int(np.prod([mesh.shape[a] for a in bt])) if bt else 1
+    nm = mesh.shape.get("model", 1) if "model" in axes else 1
+    nnt = v_t.shape[1]
+    if (not bt or nm <= 1 or x.shape[0] % nb
+            or d_out % (nm * 128) or nnt % nm):
+        return None
+    d_out_loc = d_out // nm
+    f32 = jnp.float32
+
+    def body(xs, dys, B_r, A_l, vt_l, rt_l, ct_l):
+        xl = xs.reshape(-1, d_in)
+        dyl = dys.reshape(-1, d_out_loc).astype(xl.dtype)
+        xB = jnp.matmul(xl, B_r, preferred_element_type=f32)
+        dA = jax.lax.psum(
+            scale * jnp.matmul(xB.T, dyl.astype(f32)), bt)
+        dyA = jnp.matmul(dyl, A_l.T, preferred_element_type=f32)
+        dB = jax.lax.psum(
+            scale * jnp.matmul(xl.astype(f32).T, dyA), bt + ("model",))
+        dv = jax.lax.psum(sddmm(xl, dyl, rt_l, ct_l), bt)
+        dx = sl_matmul(dyl, A_l.T, B_r.T, jnp.swapaxes(vt_l, 0, 1),
+                       jnp.swapaxes(ct_l, 0, 1), jnp.swapaxes(rt_l, 0, 1),
+                       scale)
+        dx = jax.lax.psum(dx.astype(f32), "model")
+        return dx, dB, dA, dv
+
+    try:
+        dx, dB, dA, dv_t = compat.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(bt, None, None), P(bt, None, "model"),
+                      P(None, None), P(None, "model"),
+                      P(None, "model", None), P(None, "model", None),
+                      P(None, "model", None)),
+            out_specs=(P(bt, None), P(None, None), P(None, "model"),
+                       P(None, "model", None)),
+            check_vma=False)(x, dy, B, A, v_t, rows_t, cols_t)
+    except Exception:
+        return None
+    dx = dx.reshape(x.shape).astype(x.dtype)
+    return dx, dB.astype(B.dtype), dA.astype(A.dtype), dv_t
+
+
 def _fused_grads(x, B, A, v_t, rows_t, cols_t, scale, dy):
     """Shared backward math of the fused linear: (dx, dB, dA, dv_t f32).
 
@@ -144,7 +224,12 @@ def _fused_grads(x, B, A, v_t, rows_t, cols_t, scale, dy):
     inside the sddmm kernel. All chains accumulate in f32 (an xf@B whose
     RESULT is cast to f32 rounds the token contraction through bf16 first
     — the PR-1 sparse-decode bug class); dv_t stays the sddmm kernel's
-    f32 accumulator output."""
+    f32 accumulator output. When a TP mesh is ambient and the geometry
+    divides, the work routes through :func:`_fused_grads_dist` instead
+    (local slices + psum'd small results)."""
+    out = _fused_grads_dist(x, B, A, v_t, rows_t, cols_t, scale, dy)
+    if out is not None:
+        return out
     k = x.shape[-1]
     n = dy.shape[-1]
     # backward activations in the model dtype (§Perf it.9), like the

@@ -38,11 +38,17 @@ from repro.train import step as step_lib
 
 def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
                remat: str = "none", mesh=None, cfg_overrides=None,
-               verbose: bool = True, with_compiled: bool = False):
+               verbose: bool = True, with_compiled: bool = False,
+               fsdp: bool = False):
     """Lower + compile one (arch × cell) on the production mesh. Returns a
     result dict (memory analysis, cost analysis, roofline terms); with
     ``with_compiled=True`` returns ``(result, compiled)`` so diagnostics
-    (scripts/top_collectives.py) can walk the post-SPMD HLO text."""
+    (scripts/top_collectives.py) can walk the post-SPMD HLO text.
+
+    ``fsdp=True`` additionally shards params + optimizer state over the
+    data axis (ShardingConfig.fsdp semantics: fsdp_axes=("data",)) and
+    pins the train step's gradients to that layout — the ISSUE-8
+    llama_7b placement gate drives this path."""
     cfg_overrides = dict(cfg_overrides or {})
     param_mode = cfg_overrides.pop("param_mode", None)
     cfg = registry.get_config(arch, **cfg_overrides)
@@ -57,9 +63,12 @@ def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
     batch_axes = tuple(a for a in sharding_lib.BATCH_AXES
                        if a in mesh.axis_names)
 
+    fsdp_axes = ("data",) if fsdp else ()
     params_abs, consts_abs = api.init(cfg, key=None)      # abstract init
-    p_specs = sharding_lib.param_specs(params_abs, mesh)
-    c_specs = sharding_lib.param_specs(consts_abs, mesh)
+    p_specs = sharding_lib.param_specs(params_abs, mesh,
+                                       fsdp_axes=fsdp_axes)
+    c_specs = sharding_lib.param_specs(consts_abs, mesh,
+                                       fsdp_axes=fsdp_axes)
 
     t0 = time.time()
     if cell.kind in ("train", "prefill"):
@@ -70,8 +79,11 @@ def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
             oc = OptimizerConfig()
             opt = optimizers.make(oc)
             opt_abs = jax.eval_shape(opt.init, params_abs)
-            o_specs = sharding_lib.opt_state_specs(opt_abs, p_specs, mesh)
-            fn = step_lib.make_train_step(cfg, api, opt, remat=remat)
+            o_specs = sharding_lib.opt_state_specs(opt_abs, p_specs, mesh,
+                                                   fsdp_axes=fsdp_axes)
+            fn = step_lib.make_train_step(
+                cfg, api, opt, remat=remat,
+                grad_specs=p_specs if fsdp else None)
             jfn = jax.jit(
                 fn,
                 in_shardings=(_ns(mesh, p_specs), _ns(mesh, o_specs),
@@ -125,7 +137,8 @@ def lower_cell(arch: str, cell: ShapeCell, *, multi_pod: bool = False,
 
     result = {
         "arch": arch, "cell": cell.name, "multi_pod": multi_pod,
-        "chips": chips, "remat": remat, "compile_s": round(compile_s, 1),
+        "chips": chips, "remat": remat, "fsdp": fsdp,
+        "compile_s": round(compile_s, 1),
         "bytes_per_device": {
             "argument": int(getattr(mem, "argument_size_in_bytes", 0)),
             "output": int(getattr(mem, "output_size_in_bytes", 0)),
@@ -178,6 +191,8 @@ def main(argv=None):
     ap.add_argument("--remat", default="none")
     ap.add_argument("--sp", action="store_true",
                     help="sequence-shard the residual stream (§Perf it.2)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="shard params/opt-state over the data axis too")
     ap.add_argument("--mode", default=None,
                     help="override param mode (dense/lowrank/sltrain)")
     ap.add_argument("--tag", default=None, help="label stored in the result")
@@ -206,7 +221,8 @@ def main(argv=None):
     for arch, cell, mp in todo:
         try:
             res = lower_cell(arch, cell, multi_pod=mp, remat=args.remat,
-                             cfg_overrides=overrides or None)
+                             cfg_overrides=overrides or None,
+                             fsdp=args.fsdp)
             if args.tag:
                 res["tag"] = args.tag
             if args.out:

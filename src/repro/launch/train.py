@@ -44,7 +44,7 @@ def build_train_config(args) -> TrainConfig:
                          warmup_steps=max(1, args.steps // 10),
                          total_steps=args.steps)
     sc = ShardingConfig(remat=args.remat, grad_accum=args.grad_accum,
-                        update_mode=args.update_mode)
+                        update_mode=args.update_mode, fsdp=args.fsdp)
     return TrainConfig(model=cfg, optim=oc, sharding=sc, seed=args.seed,
                        global_batch=args.batch, seq_len=args.seq,
                        steps=args.steps, log_every=args.log_every,
@@ -102,10 +102,18 @@ def main(argv=None):
     ap.add_argument("--use-mesh", action="store_true",
                     help="run under the named local mesh and place state "
                          "via the repro.dist.sharding spec engine")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="with --use-mesh: additionally shard params and "
+                         "optimizer state over the data axis "
+                         "(ShardingConfig.fsdp) and pin gradients to the "
+                         "sharded layout (reduce-scatter update)")
     args = ap.parse_args(argv)
     if args.use_mesh and args.multipod:
         ap.error("--use-mesh builds the single-process local mesh and "
                  "cannot be combined with --multipod")
+    if args.fsdp and not args.use_mesh:
+        ap.error("--fsdp shards state via the spec engine and needs "
+                 "--use-mesh (or a multipod mesh wired in code)")
 
     if args.multipod:
         import os

@@ -86,6 +86,7 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
                              optimizer: Optimizer, *, remat: str = "none",
                              grad_accum: int = 1, aux_coef: float = 0.01,
                              fused_opt: bool | None = None,
+                             grad_specs=None,
                              layer_timing: Optional[
                                  obs_metrics.Registry] = None):
     """Returns train_step(params, opt_state, consts, batch) ->
@@ -99,12 +100,25 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
     ``layer_timing`` (a registry, or None = off) turns on per-layer update
     timing: the update sweep hops to host between layer updates
     (ordered ``io_callback``) and records the elapsed wall time per layer
-    into ``train.perlayer.layer_update_ms``."""
-    if grad_accum != 1:
-        raise ValueError("update_mode='per_layer' does not compose with "
-                         "grad_accum > 1 yet — the microbatch scan would "
-                         "re-materialize the full gradient tree the mode "
-                         "exists to avoid")
+    into ``train.perlayer.layer_update_ms``.
+
+    ``grad_accum > 1`` runs the IN-SWEEP microbatch accumulator: the batch
+    splits into microbatches, the forward saves boundaries per microbatch
+    (one extra leading axis on the saves), and both reverse sweeps carry
+    the STACK of boundary cotangents — at each layer an inner scan re-runs
+    that layer's vjp once per microbatch and sums the layer-sized gradient
+    before it is reduced to a norm (pass 1) or consumed by the update
+    (pass 2). The full gradient tree is never materialized: co-resident
+    grads stay O(P_layer), exactly as at grad_accum == 1, and the result
+    is token-for-token the global + grad_accum step (sum of per-microbatch
+    grads / n_mb, clip norm of the averaged tree).
+
+    ``grad_specs`` (PartitionSpec pytree mirroring params, usually the
+    fsdp param specs) pins each layer's sliced gradient to the sliced
+    param layout (the stacked leaf's spec minus its layer dim) before the
+    in-sweep update — under fsdp the update-sweep's per-layer grads
+    reduce-scatter instead of all-reducing, and each device updates only
+    its shard. Head/embed whole-leaf grads pin the same way."""
     plapi = api.perlayer
     if plapi is None:
         raise ValueError(f"update_mode='per_layer' needs the per-layer "
@@ -123,6 +137,24 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
         upd = optimizer.update_slice_fused
     aux_ct = jnp.float32(aux_coef)
     tied = cfg.tie_embeddings
+    n_mb = grad_accum
+
+    from repro.dist.sharding import constrain
+
+    def _spec_of(tree_path):
+        """grad spec for a full tree path, or None."""
+        if grad_specs is None:
+            return None
+        node = grad_specs
+        for k in tree_path:
+            if not isinstance(node, dict) or k not in node:
+                return None
+            node = node[k]
+        return node if isinstance(node, tuple) else None
+
+    def pin_full(g, tree_path):
+        s = _spec_of(tree_path)
+        return constrain(g, *s) if s is not None else g
 
     # -- optional per-layer update timing (host hop via io_callback) ------
     if layer_timing is not None:
@@ -180,6 +212,13 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
         n = leaves[0].shape[0]
         norm_pass = ctx is None
 
+        g_specs = None
+        if grad_specs is not None and group in grad_specs:
+            sflat = jax.tree_util.tree_flatten_with_path(
+                grad_specs[group], is_leaf=lambda x: isinstance(x, tuple))[0]
+            by = {_pk(p): s for p, s in sflat}
+            g_specs = [by.get(p) for p in paths]
+
         stacked_ls, sliceable = [], []
         if not norm_pass:
             for path, leaf in zip(paths, leaves):
@@ -193,15 +232,39 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
         def body(carry, xs_i):
             p_i, c_i, x_i, ls_i = xs_i
             f = factory(c_i)
-            _, pull = jax.vjp(f, p_i, x_i)
             if norm_pass:
                 dh_c, acc = carry
+            else:
+                dh_c = carry
+            if n_mb == 1:
+                _, pull = jax.vjp(f, p_i, x_i)
                 dp, dx = pull((dh_c, aux_ct))
+            else:
+                # in-sweep microbatch accumulation: x_i / dh_c carry a
+                # leading (n_mb, ...) axis; re-run THIS layer's vjp once
+                # per microbatch and sum the layer-sized gradient in f32 —
+                # co-resident grads stay O(P_layer), never the full tree
+                def mb_body(g_acc, mb):
+                    x_m, dh_m = mb
+                    _, pull_m = jax.vjp(f, p_i, x_m)
+                    dp_m, dx_m = pull_m((dh_m, aux_ct))
+                    g_acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), g_acc, dp_m)
+                    return g_acc, dx_m
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), p_i)
+                dp, dx = jax.lax.scan(mb_body, zeros, (x_i, dh_c))
+                dp = jax.tree.map(lambda g: g / n_mb, dp)
+            if norm_pass:
                 return (dx, acc + _sq(dp)), None
-            dh_c = carry
-            dp, dx = pull((dh_c, aux_ct))
             p_leaves = treedef.flatten_up_to(p_i)
             g_leaves = treedef.flatten_up_to(dp)
+            if g_specs is not None:
+                # pin the sliced grad to the sliced param layout (stacked
+                # spec minus the layer dim): fsdp reduce-scatter point
+                g_leaves = [
+                    constrain(g, *s[1:]) if s is not None else g
+                    for g, s in zip(g_leaves, g_specs)]
             new_p, new_ls, res_g, k = [], [], [], 0
             for j, path in enumerate(paths):
                 if sliceable[j]:
@@ -260,12 +323,39 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
         patches = batch.get("patches")
 
         # ---- forward, saving per-layer boundaries -----------------------
-        bnd = plapi.forward_boundaries(cfg, params, consts, batch,
-                                       remat=remat)
+        # grad_accum == 1: one forward, saves are (n_layers, B, S, d).
+        # grad_accum > 1: the batch splits into n_mb microbatches scanned
+        # sequentially — saves gain a leading mb axis which is then moved
+        # INSIDE the layer axis ((n_layers, n_mb, B/n_mb, S, d)) so the
+        # reverse sweeps still scan layers on the leading dim.
+        if n_mb == 1:
+            bnd = plapi.forward_boundaries(cfg, params, consts, batch,
+                                           remat=remat)
+            tokens_mb = patches_mb = None
+        else:
+            def split(leaf):
+                b = leaf.shape[0]
+                return leaf.reshape(n_mb, b // n_mb, *leaf.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            tokens_mb = mbs["tokens"]
+            patches_mb = mbs.get("patches")
+
+            def fwd(_, mb):
+                return 0, plapi.forward_boundaries(cfg, params, consts, mb,
+                                                   remat=remat)
+            _, bnd = jax.lax.scan(fwd, 0, mbs)
+            bnd = dict(bnd)
+            for k in ("xs", "dense_xs"):
+                if bnd.get(k) is not None:
+                    bnd[k] = jax.tree.map(lambda a: jnp.moveaxis(a, 0, 1),
+                                          bnd[k])
         aux_total = jnp.float32(0.0)
         if bnd["aux_dense"] is not None:
             aux_total = aux_total + bnd["aux_dense"].sum()
         aux_total = aux_total + bnd["aux"].sum()
+        if n_mb > 1:
+            aux_total = aux_total / n_mb   # mean over microbatches, like
+            # the global microbatch scan's parts averaging
 
         # tied: embed enters the head as a closed-over constant — the
         # head vjp then yields only untied-leaf + boundary cotangents,
@@ -273,22 +363,84 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
         # (head_embed_cotangent) instead of being carried down the sweep
         emb0 = params["embed"] if tied else None
         hp = head_params_of(params)
-        ce, head_pull = jax.vjp(
-            lambda hp_, h_: head_ce(hp_, emb0, h_, tokens), hp,
-            bnd["h_top"])
+
+        if n_mb == 1:
+            ce, head_pull = jax.vjp(
+                lambda hp_, h_: head_ce(hp_, emb0, h_, tokens), hp,
+                bnd["h_top"])
+
+            def head_grads():
+                d_head, dh = head_pull(jnp.float32(1.0))
+                return d_head, dh
+        else:
+            def head_grads():
+                """Per-microbatch head vjp, summed head-leaf grads / n_mb
+                and the STACKED boundary cotangent the sweeps carry."""
+                def hb(carry, mb):
+                    h_m, t_m = mb
+                    g_acc, ce_acc = carry
+                    ce_m, pull = jax.vjp(
+                        lambda hp_, h_: head_ce(hp_, emb0, h_, t_m), hp,
+                        h_m)
+                    dhp_m, dh_m = pull(jnp.float32(1.0))
+                    g_acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), g_acc,
+                        dhp_m)
+                    return (g_acc, ce_acc + ce_m), dh_m
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), hp)
+                (g, ce_sum), dh = jax.lax.scan(
+                    hb, (zeros, jnp.float32(0.0)),
+                    (bnd["h_top"], tokens_mb))
+                return (jax.tree.map(lambda a: a / n_mb, g), dh,
+                        ce_sum / n_mb)
+            _, _, ce = head_grads()
         loss = ce + aux_coef * aux_total
 
         def head_embed_cotangent():
-            _, pull = jax.vjp(
-                lambda e: head_ce(hp, e, bnd["h_top"], tokens),
-                params["embed"])
-            return pull(jnp.float32(1.0))[0]
+            if n_mb == 1:
+                _, pull = jax.vjp(
+                    lambda e: head_ce(hp, e, bnd["h_top"], tokens),
+                    params["embed"])
+                return pull(jnp.float32(1.0))[0]
 
-        def emb_fn(ep):
-            return plapi.embed(cfg, ep, tokens, patches)
+            def hb(acc, mb):
+                h_m, t_m = mb
+                _, pull = jax.vjp(lambda e: head_ce(hp, e, h_m, t_m),
+                                  params["embed"])
+                return acc + pull(jnp.float32(1.0))[0].astype(jnp.float32), None
+            zeros = jnp.zeros(params["embed"].shape, jnp.float32)
+            acc, _ = jax.lax.scan(hb, zeros, (bnd["h_top"], tokens_mb))
+            return acc / n_mb
+
+        def embed_grad(dh_bottom):
+            """Embedding gradient from the bottom boundary cotangent(s)."""
+            if n_mb == 1:
+                _, pull = jax.vjp(
+                    lambda ep: plapi.embed(cfg, ep, tokens, patches),
+                    {"embed": params["embed"]})
+                return pull(dh_bottom)[0]["embed"]
+
+            def eb(acc, mb):
+                if patches_mb is None:
+                    t_m, dh_m = mb
+                    p_m = None
+                else:
+                    t_m, p_m, dh_m = mb
+                _, pull = jax.vjp(
+                    lambda ep: plapi.embed(cfg, ep, t_m, p_m),
+                    {"embed": params["embed"]})
+                g = pull(dh_m)[0]["embed"].astype(jnp.float32)
+                return acc + g, None
+            zeros = jnp.zeros(params["embed"].shape, jnp.float32)
+            xs_mb = ((tokens_mb, dh_bottom) if patches_mb is None
+                     else (tokens_mb, patches_mb, dh_bottom))
+            acc, _ = jax.lax.scan(eb, zeros, xs_mb)
+            return acc / n_mb
 
         # ---- pass 1: exact global grad norm (LOMO-style norm sweep) -----
-        d_head, dh = head_pull(jnp.float32(1.0))
+        hg = head_grads()
+        d_head, dh = hg[0], hg[1]
         total_sq = _sq(d_head)
         dh1 = dh
         if "layers" in params:
@@ -299,8 +451,7 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
             dh1, acc = sweep("dense_layers", params, consts,
                              bnd["dense_xs"], dh1, None, None)
             total_sq = total_sq + acc
-        _, emb_pull = jax.vjp(emb_fn, {"embed": params["embed"]})
-        d_embed = emb_pull(dh1)[0]["embed"]
+        d_embed = embed_grad(dh1)
         if tied:
             d_embed = d_embed.astype(jnp.float32) + head_embed_cotangent()
         total_sq = total_sq + _sq(d_embed)
@@ -313,8 +464,10 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
         if layer_timing is not None:
             io_callback(_stamp_start, None, ordered=True)
 
-        d_head, dh = head_pull(jnp.float32(1.0))
+        hg = head_grads()   # recompute: don't hold head grads across pass 1
+        d_head, dh = hg[0], hg[1]
         for key, g in d_head.items():
+            g = pin_full(g, (key,))
             ls = optimizer.leaf_state(state, (key,))
             np_, nls = upd_full(ctx, params[key], g, ls)
             new_params[key] = np_
@@ -328,9 +481,10 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
                 "dense_layers", params, consts, bnd["dense_xs"], dh, ctx,
                 state)
 
-        d_embed = emb_pull(dh)[0]["embed"]
+        d_embed = embed_grad(dh)
         if tied:
             d_embed = d_embed.astype(jnp.float32) + head_embed_cotangent()
+        d_embed = pin_full(d_embed, ("embed",))
         ls = optimizer.leaf_state(state, ("embed",))
         np_, nls = upd_full(ctx, params["embed"], d_embed, ls)
         new_params["embed"] = np_

@@ -36,13 +36,28 @@ def make_loss_fn(cfg: ModelConfig, api: ModelApi, remat: str = "none",
 
 def make_train_step(cfg: ModelConfig, api: ModelApi, optimizer: Optimizer,
                     *, remat: str = "none", grad_accum: int = 1,
-                    aux_coef: float = 0.01):
+                    aux_coef: float = 0.01, grad_specs=None):
     """Returns train_step(params, opt_state, consts, batch) ->
     (params, opt_state, metrics). With grad_accum > 1 the global batch is
     split into microbatches scanned sequentially (grads averaged) — the
-    schedule point straggler mitigation and PP would hook into (DESIGN §7)."""
+    schedule point straggler mitigation and PP would hook into (DESIGN §7).
+
+    ``grad_specs`` (a PartitionSpec pytree mirroring params — the fsdp
+    param specs from ``dist.sharding.param_specs``) pins the gradient
+    tree back to the sharded parameter layout before ``optimizer.update``:
+    under fsdp this is what turns the backward's gradient all-reduce into
+    reduce-scatter + sharded update (each device updates only its param
+    shard) instead of all-reduce + replicated update."""
+    from repro.dist.sharding import constrain
+
     loss_fn = make_loss_fn(cfg, api, remat, aux_coef)
     vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def pin(grads):
+        if grad_specs is None:
+            return grads
+        return jax.tree.map(lambda g, s: constrain(g, *s), grads,
+                            grad_specs)
 
     def train_step(params, opt_state, consts, batch):
         if grad_accum == 1:
@@ -67,6 +82,7 @@ def make_train_step(cfg: ModelConfig, api: ModelApi, optimizer: Optimizer,
             # average the true ce/aux split like the loss — fabricating
             # aux=0 here hid every MoE router-aux signal under grad accum
             parts = jax.tree.map(lambda x: x / grad_accum, parts)
+        grads = pin(grads)
         new_params, new_opt, stats = optimizer.update(grads, opt_state, params)
         metrics = {"loss": loss, **parts, **stats}
         return new_params, new_opt, metrics
@@ -146,7 +162,7 @@ def make_eval_step(cfg: ModelConfig, api: ModelApi):
 def make_compressed_dp_step(cfg: ModelConfig, api: ModelApi,
                             optimizer: Optimizer, mesh, *,
                             pod_axis: str = "pod", block: int = 256,
-                            aux_coef: float = 0.01):
+                            aux_coef: float = 0.01, obs=None):
     """Hierarchical data-parallel train step with int8-compressed cross-pod
     gradient reduction (DESIGN §4: the pod axis is the slow DCI link).
 
@@ -158,6 +174,11 @@ def make_compressed_dp_step(cfg: ModelConfig, api: ModelApi,
     (dist/compression.py).
 
     Params/opt-state are replicated across pods (DP); the batch shards.
+
+    ``obs`` (an ``obs.metrics.Registry``) threads through to
+    :func:`repro.dist.compression.psum_tree`, recording the modeled wire
+    bytes of every gradient reduction on ``dist.collective_bytes``
+    (labeled by compression) — surfaced in the trainer's metrics JSONL.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -170,7 +191,8 @@ def make_compressed_dp_step(cfg: ModelConfig, api: ModelApi,
     def body(params, opt_state, consts, batch):
         (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, consts, batch)
-        grads = psum_tree(grads, pod_axis, compress=True, block=block)
+        grads = psum_tree(grads, pod_axis, compress=True, block=block,
+                          obs=obs, n_participants=n_pods)
         grads = jax.tree.map(lambda g: g / n_pods, grads)
         loss = jax.lax.pmean(loss, pod_axis)
         new_params, new_opt, stats = optimizer.update(grads, opt_state,

@@ -169,23 +169,42 @@ class Trainer:
         self._h_phase = {k: phase_h.labels(phase=k)
                          for k in ("data", "dispatch", "sync")}
 
+        self._layer_timing = layer_timing
+        self._train_step = self._build_train_step(grad_specs=None)
+        self._relora_merge = jax.jit(_make_relora_merge(self.cfg)) \
+            if self.cfg.param.mode == "relora" else None
+
+    def _build_train_step(self, *, grad_specs):
+        """Build the jitted step for the configured update_mode.
+
+        Called once at construction (grad_specs=None) and again from
+        ``_place`` when ``sharding.fsdp`` is set — the fsdp param specs
+        only exist once the param tree does, and the step closes over
+        them to pin gradients to the sharded layout (reduce-scatter)."""
+        tc = self.tc
         if tc.sharding.update_mode == "per_layer":
             from repro.train import perlayer
-            self._train_step = jax.jit(perlayer.make_perlayer_train_step(
+            return jax.jit(perlayer.make_perlayer_train_step(
                 self.cfg, self.api, self.optimizer,
                 remat=tc.sharding.remat,
                 grad_accum=tc.sharding.grad_accum,
-                layer_timing=self.obs if layer_timing else None))
-        elif tc.sharding.update_mode == "global":
-            self._train_step = jax.jit(step_lib.make_train_step(
-                self.cfg, self.api, self.optimizer,
-                remat=tc.sharding.remat, grad_accum=tc.sharding.grad_accum))
-        else:
+                grad_specs=grad_specs,
+                layer_timing=self.obs if self._layer_timing else None))
+        if tc.sharding.update_mode != "global":
             raise ValueError(f"unknown update_mode "
                              f"{tc.sharding.update_mode!r}: expected "
                              f"'global' or 'per_layer'")
-        self._relora_merge = jax.jit(_make_relora_merge(self.cfg)) \
-            if self.cfg.param.mode == "relora" else None
+        if tc.sharding.pod_grad_compression and self.mesh is not None \
+                and "pod" in self.mesh.axis_names:
+            # int8-compressed cross-pod DP (dist/compression.py); wire
+            # counters land on this trainer's registry -> metrics JSONL
+            return jax.jit(step_lib.make_compressed_dp_step(
+                self.cfg, self.api, self.optimizer, self.mesh,
+                obs=self.obs))
+        return jax.jit(step_lib.make_train_step(
+            self.cfg, self.api, self.optimizer,
+            remat=tc.sharding.remat, grad_accum=tc.sharding.grad_accum,
+            grad_specs=grad_specs))
 
     # -- state ----------------------------------------------------------------
     def init_state(self) -> TrainerState:
@@ -200,19 +219,29 @@ class Trainer:
     def _place(self, state: TrainerState) -> TrainerState:
         """Place state on the mesh per the dist.sharding spec engine (no-op
         without a mesh). Params/consts get the param rules; optimizer
-        moments inherit the matching param leaf's spec."""
+        moments inherit the matching param leaf's spec. With
+        ``sharding.fsdp`` the specs additionally shard over the fsdp axis
+        and the train step is rebuilt to pin gradients to that layout."""
         if self.mesh is None:
             return state
         from repro.dist import sharding as dist_sharding
         mesh = self.mesh
-        p_specs = dist_sharding.param_specs(state.params, mesh)
+        sh = self.tc.sharding
+        fsdp_axes = (sh.fsdp_axis,) if sh.fsdp else ()
+        p_specs = dist_sharding.param_specs(state.params, mesh,
+                                            fsdp_axes=fsdp_axes)
+        if sh.fsdp:
+            self._train_step = self._build_train_step(grad_specs=p_specs)
         return TrainerState(
             dist_sharding.place(state.params, mesh, p_specs),
             dist_sharding.place(
                 state.opt_state, mesh,
                 dist_sharding.opt_state_specs(state.opt_state, p_specs,
-                                              mesh)),
-            dist_sharding.place(state.consts, mesh),
+                                              mesh, fsdp_axes=fsdp_axes)),
+            dist_sharding.place(
+                state.consts, mesh,
+                dist_sharding.param_specs(state.consts, mesh,
+                                          fsdp_axes=fsdp_axes)),
             state.step)
 
     def save(self, state: TrainerState, background: Optional[bool] = None) -> None:

@@ -204,7 +204,11 @@ def test_sample_support_blocked_branch_matches_dense_branch(monkeypatch):
 # Sharding specs + modeled HBM
 # ---------------------------------------------------------------------------
 
-def test_fused_tile_consts_get_replicated_specs():
+def test_fused_tile_consts_shard_nnt_over_model():
+    """ISSUE 8: tile consts shard their nnt (d_out-tile) axis over the
+    model axis — the same layout as A's d_out — so the distributed fused
+    vjp reads only local column tiles; every other dim (layer stack, nkt,
+    cap) stays replicated, and a non-dividing nnt replicates entirely."""
     from jax.sharding import PartitionSpec as P
 
     from repro.dist import sharding as shl
@@ -219,8 +223,22 @@ def test_fused_tile_consts_get_replicated_specs():
         name = str(getattr(path[-1], "key", path[-1]))
         if name in ("rows_t", "cols_t", "perm"):
             seen.add(name)
-            assert all(s is None for s in spec), (path, spec)
+            # spec covers (…stack, nkt, nnt, cap): only nnt carries model
+            assert spec[-2] in (("model",), None), (path, spec)
+            assert all(s is None for i, s in enumerate(spec)
+                       if i != len(spec) - 2), (path, spec)
     assert seen == {"rows_t", "cols_t", "perm"}
+
+    class _TPMesh:  # spec logic only reads axis_names/shape
+        axis_names = ("data", "model")
+        shape = {"data": 1, "model": 7}   # 7 never divides nnt
+
+    specs7 = shl.param_specs(consts_abs, _TPMesh())
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+            specs7, is_leaf=lambda x: isinstance(x, P))[0]:
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in ("rows_t", "cols_t", "perm"):
+            assert all(s is None for s in spec), (path, spec)
 
 
 def test_modeled_hbm_fused_beats_densify_by_compression():

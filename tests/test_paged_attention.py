@@ -288,11 +288,11 @@ def test_cache_specs_kernel_rejects_seq_sharding(gqa_model):
 
 
 # ---------------------------------------------------------------------------
-# Config validation (satellite: per_layer × grad_accum fail-fast)
+# Config validation (per_layer × grad_accum composes since the in-sweep
+# accumulator landed — repro.train.perlayer)
 # ---------------------------------------------------------------------------
 
-def test_sharding_config_rejects_perlayer_grad_accum():
-    with pytest.raises(ValueError, match="grad_accum"):
-        ShardingConfig(update_mode="per_layer", grad_accum=2)
-    ShardingConfig(update_mode="per_layer", grad_accum=1)   # fine
-    ShardingConfig(update_mode="global", grad_accum=4)      # fine
+def test_sharding_config_accepts_perlayer_grad_accum():
+    ShardingConfig(update_mode="per_layer", grad_accum=2)   # in-sweep accum
+    ShardingConfig(update_mode="per_layer", grad_accum=1)
+    ShardingConfig(update_mode="global", grad_accum=4)

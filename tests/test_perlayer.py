@@ -172,16 +172,73 @@ def test_perlayer_galore_runs_and_tracks_global():
     np.testing.assert_allclose(loss_p, loss_g, rtol=0, atol=2e-5)
 
 
-def test_perlayer_rejects_grad_accum_and_nonlm():
-    cfg = _smoke_cfg("dense")
-    api = registry.get_api(cfg)
+def test_perlayer_rejects_nonlm():
     opt = optimizers.make(OptimizerConfig())
-    with pytest.raises(ValueError, match="grad_accum"):
-        perlayer.make_perlayer_train_step(cfg, api, opt, grad_accum=2)
     xl = registry.get_smoke_config("xlstm_350m")
     with pytest.raises(ValueError, match="per-layer"):
         perlayer.make_perlayer_train_step(
             xl, registry.get_api(xl), opt)
+
+
+@pytest.mark.parametrize("exec_mode", ["dense", "fused"])
+def test_perlayer_grad_accum_matches_global_grad_accum(exec_mode):
+    """ISSUE 8 acceptance: 20-step per_layer + grad_accum=2 must be
+    token-for-token equal to global + grad_accum=2 (dense AND fused) —
+    the in-sweep microbatch accumulator reproduces sum-then-divide grads
+    and the clip norm of the averaged tree without ever materializing
+    the full gradient tree."""
+    steps = 20
+    cfg = _smoke_cfg(exec_mode)
+    api = registry.get_api(cfg)
+    opt_cfg = OptimizerConfig(name="adamw", lr=1e-3, warmup_steps=2,
+                              total_steps=steps)
+    data_g = SyntheticC4(cfg.vocab_size, 32, 4, seed=0)
+    data_p = SyntheticC4(cfg.vocab_size, 32, 4, seed=0)
+
+    opt = optimizers.make(opt_cfg)
+    fn_g = jax.jit(step_lib.make_train_step(cfg, api, opt, grad_accum=2))
+    fn_p = jax.jit(perlayer.make_perlayer_train_step(cfg, api, opt,
+                                                     grad_accum=2))
+    pg, cg = api.init(cfg, jax.random.PRNGKey(42), seed=42)
+    pp, cp = api.init(cfg, jax.random.PRNGKey(42), seed=42)
+    sg, sp = opt.init(pg), opt.init(pp)
+    loss_g, loss_p, gn_g, gn_p = [], [], [], []
+    for _ in range(steps):
+        bg = {k: jnp.asarray(v) for k, v in data_g.next_batch().items()}
+        bp = {k: jnp.asarray(v) for k, v in data_p.next_batch().items()}
+        pg, sg, mg = fn_g(pg, sg, cg, bg)
+        pp, sp, mp = fn_p(pp, sp, cp, bp)
+        loss_g.append(float(mg["loss"]))
+        loss_p.append(float(mp["loss"]))
+        gn_g.append(float(mg["grad_norm"]))
+        gn_p.append(float(mp["grad_norm"]))
+    np.testing.assert_allclose(loss_p, loss_g, rtol=0, atol=2e-5)
+    np.testing.assert_allclose(gn_p, gn_g, rtol=2e-5, atol=0)
+
+
+def test_perlayer_grad_accum_tied_and_moe():
+    """grad_accum=2 through the tied-embedding head fold and the MoE
+    dense-prefix + router-aux paths (the stacked-cotangent sweeps)."""
+    for arch, tie in (("llama_60m", True), ("deepseek_moe_16b", False)):
+        cfg = _smoke_cfg(arch=arch)
+        if tie:
+            cfg = dataclasses.replace(cfg, tie_embeddings=True)
+        api = registry.get_api(cfg)
+        opt = optimizers.make(OptimizerConfig(name="adamw", lr=1e-3,
+                                              warmup_steps=2, total_steps=4))
+        fn_g = jax.jit(step_lib.make_train_step(cfg, api, opt, grad_accum=2))
+        fn_p = jax.jit(perlayer.make_perlayer_train_step(cfg, api, opt,
+                                                         grad_accum=2))
+        params, consts = api.init(cfg, jax.random.PRNGKey(1), seed=1)
+        st = opt.init(params)
+        data = SyntheticC4(cfg.vocab_size, 32, 4, seed=3)
+        batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        _, _, mg = fn_g(params, st, consts, batch)
+        _, _, mp = fn_p(params, st, consts, batch)
+        np.testing.assert_allclose(float(mp["loss"]), float(mg["loss"]),
+                                   rtol=0, atol=3e-5)
+        np.testing.assert_allclose(float(mp["grad_norm"]),
+                                   float(mg["grad_norm"]), rtol=2e-5)
 
 
 # ---------------------------------------------------------------------------
