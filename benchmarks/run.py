@@ -90,7 +90,7 @@ def main(argv=None):
                     help="skip writing BENCH_<group>.json snapshots")
     args = ap.parse_args(argv)
 
-    from benchmarks import kernel_bench, serve_bench, tables
+    from benchmarks import kernel_bench, quant_bench, serve_bench, tables
 
     all_benches = {
         "table2_memory": tables.table2_memory,
@@ -99,6 +99,7 @@ def main(argv=None):
         "train_step_perlayer": kernel_bench.perlayer_rows,
         "serve_decode_traffic": serve_bench.decode_traffic_rows,
         "serve_slo": serve_bench.slo_rows,
+        "quant": quant_bench.quant_rows,
         "table1_support": tables.table1_support,
         "table2_ppl": tables.table2_ppl,
         "table3_throughput": tables.table3_throughput,
@@ -108,7 +109,7 @@ def main(argv=None):
     }
     quick = {"table2_memory", "kernels", "train_step_fused",
              "train_step_perlayer", "serve_decode_traffic", "serve_slo",
-             "table3_throughput", "table5_inference"}
+             "quant", "table3_throughput", "table5_inference"}
 
     selected = list(all_benches)
     if args.only:

@@ -65,6 +65,16 @@ python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8 \
   --max-len 64 --metrics-out "$OBS_DIR/serve.jsonl" \
   --trace-out "$OBS_DIR/serve_trace.json"
 
+echo "== quant smoke: train -> calibrate -> int8 serve =="
+QDIR="$(mktemp -d)"
+python -m repro.launch.train --arch llama_60m --smoke --mode sltrain \
+  --steps 3 --batch 2 --seq 16 --log-every 1 --ckpt-dir "$QDIR/ckpt"
+python -m repro.quant.calibrate --arch llama_60m --smoke \
+  --ckpt-dir "$QDIR/ckpt" --out "$QDIR/quant"
+python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8 \
+  --quant-ckpt "$QDIR/quant" --requests 4 --slots 2 --new-tokens 4 \
+  --max-len 64 --metrics-out "$OBS_DIR/serve.jsonl"
+
 echo "== obs smoke: metrics JSONL parses, traces validate =="
 python - "$OBS_DIR" <<'EOF'
 import json, sys
@@ -79,6 +89,10 @@ for name in ("train", "serve"):
 tm = lines  # serve lines from the loop's last iteration
 h = tm[-1]["metrics"].get("serve.ttft_ticks")
 assert h and h["count"] > 0 and "p50" in h, h
+# wall-clock TTFT must be populated on every serve run (SLO currency):
+# present, non-empty, and with a finite sum
+hw = tm[-1]["metrics"].get("serve.ttft_wall_ms")
+assert hw and hw["count"] > 0 and hw["sum"] >= 0, hw
 EOF
 
 echo "ci_check: all gates passed"

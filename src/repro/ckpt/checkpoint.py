@@ -200,3 +200,74 @@ class CheckpointManager:
                     arr, dtype=getattr(tmpl, "dtype", None)),
                 tree, template)
         return tree, manifest
+
+
+# -- quant artifacts (repro.quant) ---------------------------------------------
+# A quant artifact is a TEMPLATE-FREE export: unlike training checkpoints it
+# must restore without re-deriving the model tree (the loader has no calibrated
+# consts to init from), so the nested structure is rebuilt from the "/"-joined
+# keys themselves. Both trees in the artifact are dict-only, which makes that
+# reconstruction exact; the format string is versioned so stale artifacts fail
+# loudly instead of mis-dequantizing.
+QUANT_FORMAT = "sltrain-quant-v1"
+
+
+def _nest(flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    tree: Dict[str, Any] = {}
+    for key in sorted(flat):
+        node = tree
+        parts = key.split(_SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = flat[key]
+    return tree
+
+
+def save_quant_artifact(directory: str, params: Any, consts: Any, *,
+                        config_hash: str = "",
+                        extra: Optional[Dict[str, Any]] = None) -> str:
+    """Atomically export a calibrated (params, consts) pair as a versioned
+    int8 serve artifact: ``<directory>/{manifest.json, arrays.npz}``."""
+    pflat, pdt = _flatten_with_paths(params)
+    cflat, cdt = _flatten_with_paths(consts)
+    flat = {**{"params" + _SEP + k: v for k, v in pflat.items()},
+            **{"consts" + _SEP + k: v for k, v in cflat.items()}}
+    dtypes = {**{"params" + _SEP + k: v for k, v in pdt.items()},
+              **{"consts" + _SEP + k: v for k, v in cdt.items()}}
+    manifest = {
+        "format": QUANT_FORMAT,
+        "config_hash": config_hash,
+        "extra": extra or {},
+        "leaves": sorted(flat),
+        "dtypes": dtypes,
+    }
+    tmp = directory.rstrip(os.sep) + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.replace(tmp, directory)
+    return directory
+
+
+def load_quant_artifact(directory: str) -> Tuple[Any, Any, Dict[str, Any]]:
+    """Load a :func:`save_quant_artifact` export. Returns
+    (params, consts, manifest) with every leaf bit-identical to what was
+    saved (bf16/fp8 restored through the same bit-view as checkpoints)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    fmt = manifest.get("format")
+    if fmt != QUANT_FORMAT:
+        raise ValueError(f"unknown quant artifact format {fmt!r} in "
+                         f"{directory} (expected {QUANT_FORMAT!r})")
+    with np.load(os.path.join(directory, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    for key, dt in manifest["dtypes"].items():
+        if dt in _BITVIEW and key in flat:
+            flat[key] = flat[key].view(jnp.dtype(dt))
+    tree = jax.tree.map(jnp.asarray, _nest(flat))
+    return tree.get("params", {}), tree.get("consts", {}), manifest

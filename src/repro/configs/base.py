@@ -45,6 +45,13 @@ class ParamConfig:
     #              per 128×128 tile in VMEM (forward + dx), sddmm gathers
     #              dV without the G transient; dense W never touches HBM.
     #              Init emits tile consts (core/sltrain.py).
+    #   "quant"  — SERVE-ONLY post-training int8 path: sparse values are
+    #              int8 tile-CSR codes (repro.quant) dequantized in-kernel
+    #              against per-channel scales; B/A stay bf16 with the quant
+    #              error SVD-folded in. Requires calibrated consts
+    #              {qv_t, rows_q, cols_q, qscale} from a quant artifact
+    #              (python -m repro.quant.calibrate); make_train_step
+    #              rejects it.
     exec_mode: str = "dense"
     # ReLoRA restart period (steps), used only in mode == "relora".
     relora_period: int = 2000

@@ -9,7 +9,7 @@ Two support layouts:
   makes ∇V a single take_along_axis gather. TPU adaptation, DESIGN §3.
 * ``iid`` — the paper's uniform sampling, flat COO (rows, cols, v).
 
-Three execution modes (DESIGN §3; the full matrix lives in
+Four execution modes (DESIGN §3; the full matrix lives in
 ``configs.base.ParamConfig``):
 
 * ``dense``  — densify-on-the-fly then one MXU matmul; custom VJP implements
@@ -24,6 +24,12 @@ Three execution modes (DESIGN §3; the full matrix lives in
   with a DETERMINISTIC per-tile capacity (``support.tile_cap``) so the
   no-alloc dry-run twin and per-layer stacking agree; the trainable ``v``
   stays flat and is gathered/scattered through ``perm`` inside the jit.
+* ``quant`` — serve-only post-training path (repro.quant): the sparse
+  values run as int8 tile-CSR codes against per-output-channel f32
+  scales through the quantized Pallas decode kernel; B/A stay bf16 with
+  the quantization error SVD-folded in (SLiM-style). Requires the
+  calibrated consts {qv_t, rows_q, cols_q, qscale} from
+  ``quant.calibrate``; training rejects this mode (train/step.py).
 """
 from __future__ import annotations
 
@@ -378,8 +384,18 @@ def _rb_rows(cols):
 
 def sl_matmul(x, params, consts, scale: float, exec_mode: str = "dense"):
     """Apply one SLTrain linear. params={B,A,v};
-    consts={cols[,rows][,rows_t,cols_t,perm]}."""
+    consts={cols[,rows][,rows_t,cols_t,perm][,qv_t,rows_q,cols_q,qscale]}."""
     rb = "rows" not in consts
+    if exec_mode == "quant":
+        if "qv_t" not in consts:
+            raise ValueError(
+                "exec_mode='quant' needs quantized consts {qv_t, rows_q, "
+                "cols_q, qscale} — run repro.quant.calibrate on the trained "
+                "checkpoint and serve the exported artifact")
+        from repro.kernels import ops
+        return ops.sl_quant_decode(x, params["B"], params["A"],
+                                   consts["qv_t"], consts["rows_q"],
+                                   consts["cols_q"], consts["qscale"], scale)
     if exec_mode == "fused":
         if "perm" not in consts:
             raise ValueError(

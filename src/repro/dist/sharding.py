@@ -27,6 +27,9 @@ Placement policy (tensor-parallel output sharding + expert parallelism):
   ``(nkt, nnt, cap)`` int32 — shard the ``nnt`` (d_out-tile) axis over
   model, matching the A / dense-w output layout so the distributed fused
   vjp reads only local column tiles;
+* quantized serve consts (repro.quant) ``qv_t`` / ``rows_q`` / ``cols_q``
+  ``(nkt, nnt, cap)`` and ``qscale (nnt, TILE)`` — same ``nnt``-over-model
+  placement as the fused tile consts they mirror;
 * expert-stacked MoE weights — shard the expert dim over model (EP);
 * norms / embeds / biases / routers — replicated.
 
@@ -195,6 +198,14 @@ def _base_spec(name: str, keys: Tuple[str, ...], trailing: Tuple[int, ...],
         # tiles, and the distributed fused vjp (kernels/ops.py) consumes
         # the local slice without an all-gather.
         return (None, _guard(trailing[1], mesh, model_axis), None)
+    if name in ("qv_t", "rows_q", "cols_q") and nd == 3:
+        # int8 serve consts (repro.quant): same (nkt, nnt, cap) geometry
+        # as the fused tile consts, same nnt-over-model placement.
+        return (None, _guard(trailing[1], mesh, model_axis), None)
+    if name == "qscale" and nd == 2:
+        # (nnt, TILE) per-channel scales: blocked by column tile, so the
+        # nnt axis shards alongside qv_t's.
+        return (_guard(trailing[0], mesh, model_axis), None)
     # everything else is replicated.
     return (None,) * nd
 
@@ -203,7 +214,9 @@ _MATRIX_NDIM = {"w": 2, "B": 2, "A": 2, "cols": 2, "v": 2, "W0": 2,
                 "embed": 2, "lm_head": 2,
                 # fused tile consts are 3-D (nkt, nnt, cap); anything
                 # beyond that is layer/expert stacking
-                "rows_t": 3, "cols_t": 3, "perm": 3}
+                "rows_t": 3, "cols_t": 3, "perm": 3,
+                # quantized serve consts (repro.quant.layout)
+                "qv_t": 3, "rows_q": 3, "cols_q": 3, "qscale": 2}
 
 
 def _append_fsdp(base, trailing, mesh, fsdp_axes, used):

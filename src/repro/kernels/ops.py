@@ -458,3 +458,26 @@ def sl_decode(x, B, A, v_t, rows_t, cols_t, scale: float, *,
     y_sp = sd_kernel.sparse_matmul(xp, v_t, rows_t, cols_t, bm=bm,
                                    interpret=interp)[:m, :n]
     return (y_lr + y_sp.astype(jnp.float32)).astype(x.dtype).reshape(*lead, n)
+
+
+def sl_quant_decode(x, B, A, qv_t, rows_q, cols_q, qscale, scale: float, *,
+                    interpret: bool | None = None):
+    """Quantized SLTrain decode matmul (``exec_mode="quant"``, repro.quant):
+    (x·B)·A·scale in f32 + x·dequant(S) through the int8 tile-CSR kernel.
+    B/A are the bf16 error-folded factors from quant.calibrate; the sparse
+    term reads qv int8 + int16 local indices + the per-channel f32 scale
+    vector — ~5·δ B/cell vs the bf16 tile-CSR's 12·δ."""
+    from repro.kernels import sparse_decode as sd_kernel
+    interp = INTERPRET if interpret is None else interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = A.shape[-1]
+    xf = x.reshape(-1, k)
+    m = xf.shape[0]
+    bm = 8
+    xp = jnp.pad(xf, ((0, (-m) % bm), (0, (-k) % 128)))
+    y_lr = ((xf.astype(jnp.float32) @ B.astype(jnp.float32))
+            @ A.astype(jnp.float32)) * scale
+    y_sp = sd_kernel.quant_sparse_matmul(xp, qv_t, rows_q, cols_q, qscale,
+                                         bm=bm, interpret=interp)[:m, :n]
+    return (y_lr + y_sp.astype(jnp.float32)).astype(x.dtype).reshape(*lead, n)

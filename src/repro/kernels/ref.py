@@ -53,6 +53,16 @@ def sl_decode_ref(x, B, A, rows, cols, v, scale: float):
     return sl_matmul_ref(x, B, A, rows, cols, v, scale)
 
 
+def sl_quant_decode_ref(x, B, A, rows, cols, qv, ch_scales, scale: float):
+    """Oracle for the quantized decode path (repro.quant): dequantize the
+    int8 sparse codes against the per-output-channel scales, densify, and
+    matmul in f32. ``qv`` int8 flat COO codes; ``ch_scales`` (d_out,) f32."""
+    W = (B.astype(jnp.float32) @ A.astype(jnp.float32)) * scale
+    v = qv.astype(jnp.float32) * ch_scales.astype(jnp.float32)[cols]
+    W = W.at[rows, cols].add(v, mode="drop", unique_indices=True)
+    return (x.astype(jnp.float32) @ W).astype(x.dtype)
+
+
 def paged_attention_ref(q, k_pool, v_pool, block_table, positions, *,
                         scale: float, softcap: float = 0.0,
                         window: int = 0):

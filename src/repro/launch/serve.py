@@ -37,6 +37,15 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--sparse-decode", action="store_true",
                     help="factored SLTrain decode (DESIGN §3 beyond-paper)")
+    ap.add_argument("--exec-mode", default=None,
+                    choices=("dense", "sparse", "fused", "quant"),
+                    help="explicit SLTrain serve execution mode (supersedes "
+                         "--sparse-decode; 'quant' requires --quant-ckpt)")
+    ap.add_argument("--quant-ckpt", default=None,
+                    help="load a calibrated int8 quant artifact "
+                         "(python -m repro.quant.calibrate) instead of a "
+                         "training checkpoint; defaults --exec-mode to "
+                         "'quant'")
     ap.add_argument("--paged", action="store_true",
                     help="block-paged KV cache with batched prefill and "
                          "per-slot decode positions (serve/kv.py)")
@@ -80,8 +89,22 @@ def main(argv=None):
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
            else registry.get_config(args.arch))
+    if args.quant_ckpt and cfg.param.mode != "sltrain":
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, param=dataclasses.replace(cfg.param, mode="sltrain"))
     api = registry.get_api(cfg)
-    params, consts = api.init(cfg, jax.random.PRNGKey(0), seed=0)
+    exec_mode = args.exec_mode
+    if args.quant_ckpt:
+        # the artifact carries BOTH trees (error-folded B/A params and the
+        # int8 tile-CSR consts) — no init-then-restore template needed
+        from repro.ckpt.checkpoint import load_quant_artifact
+        params, consts, qman = load_quant_artifact(args.quant_ckpt)
+        exec_mode = exec_mode or "quant"
+        print(f"quant artifact: {args.quant_ckpt} "
+              f"({qman['extra'].get('n_matrices', '?')} matrices)")
+    else:
+        params, consts = api.init(cfg, jax.random.PRNGKey(0), seed=0)
     if args.ckpt_dir:
         from repro.ckpt.checkpoint import CheckpointManager
         cm = CheckpointManager(args.ckpt_dir)
@@ -100,7 +123,8 @@ def main(argv=None):
     trace.start()
     eng = ServeEngine(cfg, params, consts, n_slots=args.slots,
                       max_len=args.max_len,
-                      sparse_decode=args.sparse_decode, mesh=mesh,
+                      sparse_decode=args.sparse_decode,
+                      exec_mode=exec_mode, mesh=mesh,
                       paged=args.paged, block_len=args.block_len,
                       attn_kernel=args.attn_kernel,
                       prefix_sharing=args.prefix_sharing,
@@ -143,7 +167,7 @@ def main(argv=None):
     print(f"served {len(reqs)} requests, {total_toks} tokens in {dt:.2f}s "
           f"({total_toks/dt:.1f} tok/s, {stats['decode_steps']} decode steps,"
           f" {eng.dispatches['prefill']} prefill dispatches, {mode},"
-          f" sparse_decode={args.sparse_decode})")
+          f" exec_mode={eng.cfg.param.exec_mode})")
     if args.prefix_sharing:
         pt = eng.prefill_traffic
         print(f"  prefix sharing: {pt['tokens_shared']}/{pt['tokens_total']} "

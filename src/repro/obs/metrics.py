@@ -355,6 +355,76 @@ class Registry:
         for inst in insts:
             inst.reset()
 
+    def to_prometheus_text(self) -> str:
+        """Render the registry in the Prometheus text exposition format
+        (version 0.0.4) — what a ``/metrics`` endpoint would serve.
+
+        Per instrument family: ``# HELP`` / ``# TYPE`` header, then one
+        sample per child (or the parent itself when unlabeled). Metric
+        names are sanitized (``[^a-zA-Z0-9_:]`` → ``_``; a leading digit
+        gets a ``_`` prefix), label values escape backslash, quote, and
+        newline per the spec, and labels render in sorted-key order
+        (``label_items`` is already sorted at creation). Histograms emit
+        cumulative ``_bucket{le=...}`` series ending at ``le="+Inf"``
+        plus ``_sum`` and ``_count``; unset gauges are skipped."""
+        def san(name: str) -> str:
+            s = "".join(ch if (ch.isascii() and (ch.isalnum() or ch in "_:"))
+                        else "_" for ch in name)
+            return "_" + s if s[:1].isdigit() else s
+
+        def esc_label(v: str) -> str:
+            return (v.replace("\\", "\\\\").replace('"', '\\"')
+                    .replace("\n", "\\n"))
+
+        def esc_help(v: str) -> str:
+            return v.replace("\\", "\\\\").replace("\n", "\\n")
+
+        def labelstr(items, extra=()) -> str:
+            parts = [f'{san(k)}="{esc_label(str(v))}"'
+                     for k, v in (*items, *extra)]
+            return "{" + ",".join(parts) + "}" if parts else ""
+
+        def num(v) -> str:
+            f = float(v)
+            if f != f:
+                return "NaN"
+            if f == math.inf:
+                return "+Inf"
+            if f == -math.inf:
+                return "-Inf"
+            return repr(int(f)) if f.is_integer() else repr(f)
+
+        lines = []
+        with self._lock:
+            insts = sorted(self._instruments.items())
+        for _, inst in insts:
+            name = san(inst.name)
+            if inst.help:
+                lines.append(f"# HELP {name} {esc_help(inst.help)}")
+            lines.append(f"# TYPE {name} {inst.kind}")
+            children = ([inst._children[k] for k in sorted(inst._children)]
+                        if inst._children else [inst])
+            for ch in children:
+                ls = ch.label_items
+                if isinstance(ch, Counter):
+                    lines.append(f"{name}{labelstr(ls)} {num(ch._v)}")
+                elif isinstance(ch, Gauge):
+                    if ch._v is not None:
+                        lines.append(f"{name}{labelstr(ls)} {num(ch._v)}")
+                elif isinstance(ch, Histogram):
+                    cum = 0
+                    for bound, n in zip(ch.bounds, ch._counts):
+                        cum += n
+                        lines.append(f"{name}_bucket"
+                                     f"{labelstr(ls, (('le', num(bound)),))}"
+                                     f" {cum}")
+                    cum += ch._counts[-1]
+                    lines.append(f"{name}_bucket"
+                                 f"{labelstr(ls, (('le', '+Inf'),))} {cum}")
+                    lines.append(f"{name}_sum{labelstr(ls)} {num(ch._sum)}")
+                    lines.append(f"{name}_count{labelstr(ls)} {cum}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
     def write_jsonl(self, path: str, extra: Optional[dict] = None) -> None:
         """Append one ``{"ts": unix_s, ...extra, "metrics": snapshot}``
         line. One line per call — the caller owns the cadence (the trainer

@@ -1,0 +1,18 @@
+"""repro.quant — post-training int8 quantization of SLTrain weights for
+serving (ROADMAP open item 2; SLiM arXiv:2410.09615, SLoPe
+arXiv:2405.16325).
+
+* :mod:`repro.quant.layout` — the quantized tile-CSR layout: int8 codes
+  + int16 tile-local indices at the deterministic ``support.tile_cap``
+  geometry, plus per-output-channel f32 scales blocked by column tile,
+  and the modeled decode-bytes accounting.
+* :mod:`repro.quant.calibrate` — the one-shot activation-free quantizer:
+  per-channel symmetric int8 scales on the dense-equivalent W = B·A + S,
+  sparse values quantized against them, residual error SVD-folded into
+  the bf16 low-rank factors. Also the CLI
+  (``python -m repro.quant.calibrate``) that turns a trained checkpoint
+  into a versioned quant artifact (ckpt/checkpoint.py).
+Submodules import lazily (``from repro.quant import calibrate``) — an
+eager package import here would trip runpy's double-import warning under
+``python -m repro.quant.calibrate``, the CLI entry point.
+"""

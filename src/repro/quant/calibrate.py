@@ -1,0 +1,251 @@
+"""One-shot post-training quantizer for SLTrain weights (SLiM-style,
+activation-free variant).
+
+Per SLTrain linear (params {B, A, v}, consts {cols[, rows]}):
+
+1. form the dense-equivalent ``W = scale·B·A ⊕ V`` in f32,
+2. compute symmetric per-output-channel int8 scales on W (optional
+   absmax-clip percentile for outlier suppression),
+3. quantize the SPARSE values ``v`` to int8 codes against those scales,
+4. fold the residual quantization error ``E = V − dequant(qv)`` into the
+   low-rank factors via a rank-preserving SVD correction: the corrected
+   ``scale·B'·A'`` is the best rank-r approximation of ``scale·B·A + E``
+   (SLiM's saliency trick without activations — B', A' stay bf16 and
+   absorb most of the sparse quant error for free),
+5. bake the codes into the quantized tile-CSR layout
+   (:mod:`repro.quant.layout`) at the deterministic ``support.tile_cap``
+   geometry.
+
+:func:`calibrate_tree` walks a whole model's (params, consts) trees —
+including layer-stacked leaves, whose supports differ per layer — and
+returns the quantized twin: params with B/A replaced, consts with
+{qv_t, rows_q, cols_q, qscale} added per linear. Everything else
+(embeds, norms, lm_head, the flat bf16 ``v``) passes through unchanged,
+so the artifact serves any exec_mode and round-trips through the
+versioned export in ckpt/checkpoint.py bit-exactly.
+
+CLI (the ci_check.sh quant smoke):
+
+  PYTHONPATH=src python -m repro.quant.calibrate --arch llama_60m \\
+      --smoke --ckpt-dir /path/to/train/ckpt --out /path/to/artifact
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant import layout as qlayout
+
+
+def _is_sl_linear(p) -> bool:
+    return isinstance(p, dict) and {"B", "A", "v"} <= set(p.keys())
+
+
+def _flat_support(v: np.ndarray, c: dict) -> Tuple[np.ndarray, np.ndarray,
+                                                   np.ndarray]:
+    """(rows, cols, values) flat COO for one UNSTACKED linear's support.
+    Row-balanced stores implicit rows (iota per row, k entries each) —
+    the same flatten order init_params used to reshape cols to (d_in, k)."""
+    if "rows" in c:
+        rows = np.asarray(c["rows"]).reshape(-1)
+        cols = np.asarray(c["cols"]).reshape(-1)
+    else:
+        cols2 = np.asarray(c["cols"])
+        d_in, k = cols2.shape
+        rows = np.repeat(np.arange(d_in, dtype=np.int32), k)
+        cols = cols2.reshape(-1)
+    return rows, cols, np.asarray(v, np.float32).reshape(-1)
+
+
+def quantize_linear(p: dict, c: dict, *, alpha: float, delta: float,
+                    support_kind: str,
+                    clip_percentile: Optional[float] = None,
+                    fold_error: bool = True) -> Tuple[dict, dict, dict]:
+    """Quantize ONE unstacked SLTrain linear.
+
+    Returns (new_params, quant_consts, stats): params keep {B, A, v}
+    dtypes/shapes (B/A error-folded when ``fold_error``), quant_consts is
+    the {qv_t, rows_q, cols_q, qscale} dict from
+    :func:`layout.build_quant_consts`, and stats carries the max |W −
+    W_quant| reconstruction error of the dense equivalent (after fold)."""
+    B = np.asarray(p["B"], np.float32)
+    A = np.asarray(p["A"], np.float32)
+    d_in, r = B.shape
+    d_out = A.shape[1]
+    scale = alpha / r
+    rows, cols, vf = _flat_support(p["v"], c)
+
+    BA = scale * (B @ A)
+    W = BA.copy()
+    W[rows, cols] += vf
+    scales = qlayout.channel_scales(W, clip_percentile=clip_percentile)
+    qv = qlayout.quantize_values(vf, cols, scales)
+    deq = qlayout.dequantize_values(qv, cols, scales)
+
+    B2, A2 = B, A
+    if fold_error:
+        # scale·B'·A' := best rank-r approximation of scale·B·A + E, so
+        # the dequantized serve-time weight scale·B'·A' + dequant(qv)
+        # lands as close to W as a rank-r correction can get
+        E = np.zeros_like(BA)
+        E[rows, cols] = vf - deq
+        U, S, Vt = np.linalg.svd(BA + E, full_matrices=False)
+        root = np.sqrt(np.maximum(S[:r], 0.0) / scale)
+        B2 = U[:, :r] * root[None, :]
+        A2 = root[:, None] * Vt[:r]
+
+    Wq = scale * (B2 @ A2)
+    Wq[rows, cols] += deq
+    stats = {"nnz": int(vf.size),
+             "max_abs_err": float(np.max(np.abs(W - Wq))),
+             "rms_err": float(np.sqrt(np.mean((W - Wq) ** 2)))}
+    new_p = dict(p)
+    new_p["B"] = jnp.asarray(B2).astype(p["B"].dtype)
+    new_p["A"] = jnp.asarray(A2).astype(p["A"].dtype)
+    qc = qlayout.build_quant_consts(rows, cols, qv, scales, d_in, d_out,
+                                    delta, support_kind)
+    return new_p, qc, stats
+
+
+def _quantize_stacked(p: dict, c: dict, *, alpha: float, delta: float,
+                      support_kind: str,
+                      clip_percentile: Optional[float],
+                      fold_error: bool, stats: dict) -> Tuple[dict, dict]:
+    """Quantize one linear whose leaves may carry leading stack dims
+    (layer/period stacking prepends axes to every leaf; supports differ
+    per slice). Loops host-side over the flattened lead and re-stacks —
+    shapes are deterministic (tile_cap), so the stack is always ragged-free."""
+    B = np.asarray(p["B"])
+    lead = B.shape[:-2]
+    if not lead:
+        new_p, qc, st = quantize_linear(
+            p, c, alpha=alpha, delta=delta, support_kind=support_kind,
+            clip_percentile=clip_percentile, fold_error=fold_error)
+        stats["n_matrices"] += 1
+        stats["nnz"] += st["nnz"]
+        stats["max_abs_err"] = max(stats["max_abs_err"], st["max_abs_err"])
+        return new_p, {**c, **qc}
+    n = int(np.prod(lead))
+
+    def slc(leaf):
+        a = np.asarray(leaf)
+        return a.reshape((n,) + a.shape[len(lead):])
+
+    ps = {k: slc(v) for k, v in p.items()}
+    cs = {k: slc(v) for k, v in c.items()}
+    out_p, out_q = [], []
+    for i in range(n):
+        pi = {k: v[i] for k, v in ps.items()}
+        ci = {k: v[i] for k, v in cs.items()}
+        np_i, qc_i = _quantize_stacked(
+            pi, ci, alpha=alpha, delta=delta, support_kind=support_kind,
+            clip_percentile=clip_percentile, fold_error=fold_error,
+            stats=stats)
+        out_p.append(np_i)
+        out_q.append(qc_i)
+
+    def restack(dicts):
+        return {k: jnp.asarray(np.stack([np.asarray(d[k]) for d in dicts])
+                               .reshape(lead + np.asarray(dicts[0][k]).shape))
+                for k in dicts[0]}
+
+    new_p = restack(out_p)
+    new_p = {k: v.astype(p[k].dtype) if k in ("B", "A", "v") else v
+             for k, v in new_p.items()}
+    return new_p, restack(out_q)
+
+
+def calibrate_tree(params, consts, *, alpha: float, delta: float,
+                   support_kind: str = "row_balanced",
+                   clip_percentile: Optional[float] = None,
+                   fold_error: bool = True):
+    """Walk a model's (params, consts) trees and quantize every SLTrain
+    linear. Returns (new_params, new_consts, stats); non-linear leaves
+    (embeds, norms, dense w) and existing consts pass through untouched."""
+    stats = {"n_matrices": 0, "nnz": 0, "max_abs_err": 0.0,
+             "format": "sltrain-quant-v1"}
+
+    def walk(p, c):
+        if _is_sl_linear(p):
+            return _quantize_stacked(
+                p, c if isinstance(c, dict) else {}, alpha=alpha,
+                delta=delta, support_kind=support_kind,
+                clip_percentile=clip_percentile, fold_error=fold_error,
+                stats=stats)
+        new_p, new_c = {}, {}
+        csub = c if isinstance(c, dict) else {}
+        for k, v in p.items():
+            if isinstance(v, dict):
+                sp, sc = walk(v, csub.get(k, {}))
+                new_p[k] = sp
+                if sc:
+                    new_c[k] = sc
+            else:
+                new_p[k] = v
+        for k, v in csub.items():          # consts with no param sibling
+            if k not in new_c:
+                new_c[k] = v
+        return new_p, new_c
+
+    new_params, new_consts = walk(params, consts)
+    return new_params, new_consts, stats
+
+
+def calibrate_model(cfg, params, consts, **kw):
+    """Config-driven wrapper: alpha/delta/support_kind from cfg.param."""
+    pc = cfg.param
+    if pc.mode != "sltrain":
+        raise ValueError(f"quant calibration targets mode='sltrain' "
+                         f"(got {pc.mode!r})")
+    return calibrate_tree(params, consts, alpha=pc.alpha, delta=pc.delta,
+                          support_kind=pc.support_kind, **kw)
+
+
+def main(argv=None):
+    import argparse
+    import dataclasses
+
+    import jax
+
+    from repro.ckpt import checkpoint as ckpt_lib
+    from repro.models import registry
+
+    ap = argparse.ArgumentParser(
+        description="one-shot int8 calibration of a trained SLTrain "
+                    "checkpoint into a quant serve artifact")
+    ap.add_argument("--arch", default="llama_60m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", required=True,
+                    help="trained checkpoint dir (repro.launch.train)")
+    ap.add_argument("--out", required=True,
+                    help="output directory for the quant artifact")
+    ap.add_argument("--clip-percentile", type=float, default=None,
+                    help="absmax-clip percentile for the channel scales "
+                         "(default: exact absmax)")
+    ap.add_argument("--no-fold", action="store_true",
+                    help="skip the SVD error fold into B/A")
+    args = ap.parse_args(argv)
+
+    cfg = (registry.get_smoke_config(args.arch) if args.smoke
+           else registry.get_config(args.arch))
+    if cfg.param.mode != "sltrain":
+        cfg = dataclasses.replace(
+            cfg, param=dataclasses.replace(cfg.param, mode="sltrain"))
+    api = registry.get_api(cfg)
+    params, consts = api.init(cfg, jax.random.PRNGKey(0), seed=0)
+    cm = ckpt_lib.CheckpointManager(args.ckpt_dir)
+    tree, _ = cm.restore({"params": params}, allow_config_change=True)
+    qp, qc, stats = calibrate_model(
+        cfg, tree["params"], consts,
+        clip_percentile=args.clip_percentile, fold_error=not args.no_fold)
+    path = ckpt_lib.save_quant_artifact(args.out, qp, qc,
+                                        config_hash=cfg.hash(), extra=stats)
+    print(f"quant artifact: {stats['n_matrices']} matrices, "
+          f"{stats['nnz']} int8 codes, max |W - Wq| = "
+          f"{stats['max_abs_err']:.3e} -> {path}")
+
+
+if __name__ == "__main__":
+    main()

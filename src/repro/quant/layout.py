@@ -1,0 +1,117 @@
+"""Quantized tile-CSR layout for the ``exec_mode="quant"`` decode path.
+
+The bf16 sparse-decode kernel reads, per nonzero, a f32 tile value (4 B)
+plus int32 local row/col indices (8 B) — 12·δ B/cell. This layout stores:
+
+* ``qv_t``    int8  (nkt, nnt, cap) — quantized codes baked in tile order
+* ``rows_q``  int16 (nkt, nnt, cap) — tile-LOCAL row index (< 128)
+* ``cols_q``  int16 (nkt, nnt, cap) — tile-local col index (< 128)
+* ``qscale``  f32   (nnt, TILE)     — per-output-channel scales, blocked
+                                      by column tile so the kernel's
+                                      (1, TILE) BlockSpec delivers
+                                      exactly the slice tile j needs
+
+i.e. 1 + 2 + 2 = 5 B per nonzero (≈ 5·δ B/cell, a 2.4× cut) plus a
+d_out-sized f32 scale vector amortized over all nonzeros of the matrix.
+Geometry reuses ``support.tile_cap`` / ``kernels.ops.prepare_tile_consts``
+exactly, so quantized shapes are as deterministic as the fused-training
+consts (dry-run twins, per-layer stacking, elastic restore all hold).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import support as support_lib
+
+TILE = support_lib.TILE
+
+# bytes per NONZERO read by each sparse decode path (the modeled HBM
+# accounting benchmarks/quant_bench.py and the serve demo report):
+#   bf16 tile-CSR: f32 value + int32 row + int32 col
+#   int8 layout:   int8 code + int16 row + int16 col
+BYTES_PER_NNZ_BF16 = 4 + 4 + 4
+BYTES_PER_NNZ_INT8 = 1 + 2 + 2
+
+
+def channel_scales(W: np.ndarray, *, clip_percentile: float | None = None
+                   ) -> np.ndarray:
+    """Symmetric per-output-channel int8 scales for a dense-equivalent
+    (d_in, d_out) weight: absmax over each column / 127, optionally
+    clipped to the ``clip_percentile``-th percentile of the column's
+    |values| (outlier suppression). Returns (d_out,) f32, floored away
+    from zero so all-zero channels still divide cleanly."""
+    absW = np.abs(np.asarray(W, np.float32))
+    if clip_percentile is not None:
+        amax = np.percentile(absW, clip_percentile, axis=0)
+    else:
+        amax = absW.max(axis=0)
+    return (np.maximum(amax, 1e-8) / 127.0).astype(np.float32)
+
+
+def quantize_values(v: np.ndarray, cols: np.ndarray, scales: np.ndarray
+                    ) -> np.ndarray:
+    """Flat COO sparse values → int8 codes against their column's scale.
+    Codes clip to ±127 (symmetric; -128 unused so negation round-trips)."""
+    q = np.round(np.asarray(v, np.float32) / scales[np.asarray(cols)])
+    return np.clip(q, -127, 127).astype(np.int8)
+
+
+def dequantize_values(qv: np.ndarray, cols: np.ndarray, scales: np.ndarray
+                      ) -> np.ndarray:
+    """Inverse of :func:`quantize_values` (f32)."""
+    return qv.astype(np.float32) * scales[np.asarray(cols)]
+
+
+def build_quant_consts(rows: np.ndarray, cols: np.ndarray, qv: np.ndarray,
+                       scales: np.ndarray, d_in: int, d_out: int,
+                       delta: float, support_kind: str) -> dict:
+    """COO support + int8 codes + (d_out,) scales → the quantized
+    tile-CSR const dict {qv_t, rows_q, cols_q, qscale} at the
+    deterministic ``support.tile_cap`` capacity. Padding slots carry
+    qv == 0 at local (0, 0) — they contribute exactly 0 through the
+    kernel; padded columns past d_out get scale 1.0 (never referenced)."""
+    from repro.kernels import ops
+    cap = support_lib.tile_cap(d_in, d_out, delta, support_kind)
+    tiles = ops.prepare_tile_consts(np.asarray(rows), np.asarray(cols),
+                                    d_in, d_out, pad=cap)
+    perm = np.asarray(tiles["perm"])
+    qv_flat = np.asarray(qv, np.int8).reshape(-1)
+    qv_t = np.where(perm >= 0, qv_flat[np.maximum(perm, 0)], 0
+                    ).astype(np.int8)
+    nnt = perm.shape[1]
+    sc = np.ones(nnt * TILE, np.float32)
+    sc[:d_out] = np.asarray(scales, np.float32)
+    return {"qv_t": jnp.asarray(qv_t),
+            "rows_q": jnp.asarray(np.asarray(tiles["rows_t"], np.int16)),
+            "cols_q": jnp.asarray(np.asarray(tiles["cols_t"], np.int16)),
+            "qscale": jnp.asarray(sc.reshape(nnt, TILE))}
+
+
+def abstract_quant_consts(d_in: int, d_out: int, delta: float,
+                          support_kind: str) -> dict:
+    """ShapeDtypeStruct twin of :func:`build_quant_consts` (dry-run /
+    sharding-spec derivation without a calibrated artifact)."""
+    import jax
+    sds = jax.ShapeDtypeStruct
+    nkt = (d_in + TILE - 1) // TILE
+    nnt = (d_out + TILE - 1) // TILE
+    cap = support_lib.tile_cap(d_in, d_out, delta, support_kind)
+    return {"qv_t": sds((nkt, nnt, cap), jnp.int8),
+            "rows_q": sds((nkt, nnt, cap), jnp.int16),
+            "cols_q": sds((nkt, nnt, cap), jnp.int16),
+            "qscale": sds((nnt, TILE), jnp.float32)}
+
+
+def sparse_decode_bytes(d_in: int, d_out: int, delta: float,
+                        support_kind: str = "row_balanced", *,
+                        quant: bool) -> int:
+    """Modeled HBM bytes one decode step reads for the SPARSE term of one
+    (d_in, d_out) matrix: per-nonzero payload plus, for the quant layout,
+    the per-channel f32 scale vector. Excludes the low-rank factors
+    (identical bytes on both paths) and tile-cap padding (both layouts
+    pad identically, so the ratio is unchanged)."""
+    nnz = support_lib.nnz_for(d_in, d_out, delta, support_kind)
+    if quant:
+        return nnz * BYTES_PER_NNZ_INT8 + d_out * 4
+    return nnz * BYTES_PER_NNZ_BF16

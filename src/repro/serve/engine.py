@@ -35,6 +35,11 @@ Two cache layouts share the engine API:
 SLTrain tie-in (DESIGN §3, beyond-paper): either layout can run the model
 with ``param.exec_mode="sparse"`` so decode reads only the factored
 parameter bytes — the paper's compression ratio becomes decode bandwidth.
+``exec_mode="quant"`` goes one step further: the engine serves a
+post-training int8 artifact (repro.quant) whose sparse values are int8
+tile-CSR codes dequantized inside the Pallas decode kernel — the sparse
+term's per-nonzero payload drops 12 B → 5 B (engine construction
+validates the calibrated consts are present; exec_mode kwarg below).
 The paged layout makes KV *accounting* proportional to live tokens —
 blocks alloc/free as requests grow and finish, so the pool can be
 oversubscribed (``n_blocks`` below worst case) and backpressure/preempt
@@ -115,15 +120,42 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, consts, *, n_slots: int = 4,
-                 max_len: int = 256, sparse_decode: bool = False, mesh=None,
+                 max_len: int = 256, sparse_decode: bool = False,
+                 exec_mode: Optional[str] = None, mesh=None,
                  paged: bool = False, block_len: int = 16, n_blocks: int = 0,
                  attn_kernel: Optional[str] = None,
                  prefix_sharing: bool = False,
                  obs: Optional[obs_metrics.Registry] = None,
                  trace: Optional[obs_trace.Trace] = None):
+        if exec_mode is not None:
+            # explicit serve-time execution mode (supersedes the bool
+            # sparse_decode shorthand; "quant" is the int8 artifact path)
+            if sparse_decode:
+                raise ValueError("pass either sparse_decode or exec_mode, "
+                                 "not both")
+            if cfg.param.mode != "sltrain":
+                raise ValueError(f"exec_mode={exec_mode!r} requires "
+                                 "param.mode='sltrain'")
+            if exec_mode not in ("dense", "sparse", "fused", "quant"):
+                raise ValueError(f"unknown exec_mode {exec_mode!r}")
+            cfg = dataclasses.replace(
+                cfg, param=dataclasses.replace(cfg.param,
+                                               exec_mode=exec_mode))
         if sparse_decode and cfg.param.mode == "sltrain":
             cfg = dataclasses.replace(
                 cfg, param=dataclasses.replace(cfg.param, exec_mode="sparse"))
+        if cfg.param.mode == "sltrain" and cfg.param.exec_mode == "quant":
+            # fail at construction, not first dispatch: quant decode needs
+            # the calibrated int8 consts from a quant artifact
+            leaf_names = {p[-1].key if hasattr(p[-1], "key") else str(p[-1])
+                          for p, _ in
+                          jax.tree_util.tree_flatten_with_path(consts)[0]}
+            if "qv_t" not in leaf_names:
+                raise ValueError(
+                    "exec_mode='quant' needs calibrated consts (qv_t/rows_q/"
+                    "cols_q/qscale) — load a repro.quant artifact "
+                    "(python -m repro.quant.calibrate) and pass its "
+                    "params/consts")
         if attn_kernel is not None:
             cfg = dataclasses.replace(cfg, attn_kernel=attn_kernel)
         if cfg.attn_kernel not in ("gather", "paged"):

@@ -50,6 +50,12 @@ def make_train_step(cfg: ModelConfig, api: ModelApi, optimizer: Optimizer,
     shard) instead of all-reduce + replicated update."""
     from repro.dist.sharding import constrain
 
+    if cfg.param.mode == "sltrain" and cfg.param.exec_mode == "quant":
+        raise ValueError(
+            "exec_mode='quant' is serve-only (int8 codes are not trainable) "
+            "— train with dense/sparse/fused and calibrate afterwards "
+            "(python -m repro.quant.calibrate)")
+
     loss_fn = make_loss_fn(cfg, api, remat, aux_coef)
     vg = jax.value_and_grad(loss_fn, has_aux=True)
 

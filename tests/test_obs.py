@@ -143,6 +143,69 @@ def test_write_jsonl_appends_parseable_lines(tmp_path):
     assert all("ts" in l for l in lines)
 
 
+def test_prometheus_text_counters_gauges_and_sanitization():
+    reg = obs_metrics.Registry()
+    reg.counter("serve.dispatches", help="jit dispatches").inc(3)
+    g = reg.gauge("train.loss")
+    g.set(1.5)
+    reg.gauge("train.unset")           # never set → no sample line
+    reg.counter("0weird-name").inc()
+    text = reg.to_prometheus_text()
+    lines = text.splitlines()
+    assert text.endswith("\n")
+    # names sanitized: dots/dashes → _, leading digit prefixed
+    assert "# HELP serve_dispatches jit dispatches" in lines
+    assert "# TYPE serve_dispatches counter" in lines
+    assert "serve_dispatches 3" in lines
+    assert "train_loss 1.5" in lines
+    assert "_0weird_name 1" in lines
+    # unset gauge: TYPE header only, no sample
+    assert "# TYPE train_unset gauge" in lines
+    assert not any(l.startswith("train_unset ") for l in lines)
+    # families render in sorted name order
+    assert lines.index("# TYPE _0weird_name counter") < \
+        lines.index("# TYPE serve_dispatches counter")
+
+
+def test_prometheus_text_label_escaping_and_ordering():
+    reg = obs_metrics.Registry()
+    c = reg.counter("t.labeled")
+    # labels are stored sorted by key regardless of kwargs order, and
+    # values escape backslash, quote, and newline per the text format
+    c.labels(zeta="z", alpha='say "hi"\n\\end').inc(2)
+    c.labels(zeta="other", alpha="a").inc()
+    text = reg.to_prometheus_text()
+    assert ('t_labeled{alpha="say \\"hi\\"\\n\\\\end",zeta="z"} 2'
+            in text.splitlines())
+    assert 't_labeled{alpha="a",zeta="other"} 1' in text.splitlines()
+    # the two children each get exactly one sample line; no parent sample
+    assert sum(l.startswith("t_labeled{") for l in text.splitlines()) == 2
+    assert not any(l.startswith("t_labeled ") for l in text.splitlines())
+
+
+def test_prometheus_text_histogram_cumulative_buckets():
+    reg = obs_metrics.Registry()
+    h = reg.histogram("t.lat", buckets=(1.0, 2.0, 5.0))
+    for v in (0.5, 1.5, 1.7, 4.0, 99.0):   # one overflow sample
+        h.observe(v)
+    lines = reg.to_prometheus_text().splitlines()
+    assert "# TYPE t_lat histogram" in lines
+    # le buckets are CUMULATIVE and end at +Inf == _count
+    assert 't_lat_bucket{le="1"} 1' in lines
+    assert 't_lat_bucket{le="2"} 3' in lines
+    assert 't_lat_bucket{le="5"} 4' in lines
+    assert 't_lat_bucket{le="+Inf"} 5' in lines
+    assert "t_lat_count 5" in lines
+    assert any(l.startswith("t_lat_sum 106.7") for l in lines)
+    # a labeled histogram emits per-child series with the le label LAST
+    h2 = reg.histogram("t.lab", buckets=(1.0,))
+    h2.labels(phase="x").observe(0.5)
+    lines = reg.to_prometheus_text().splitlines()
+    assert 't_lab_bucket{phase="x",le="1"} 1' in lines
+    assert 't_lab_bucket{phase="x",le="+Inf"} 1' in lines
+    assert 't_lab_count{phase="x"} 1' in lines
+
+
 # ---------------------------------------------------------------------------
 # trace: spans + schema validation
 # ---------------------------------------------------------------------------

@@ -1,0 +1,281 @@
+"""Post-training int8 quantized serving (repro.quant): kernel parity
+against the ref oracle and the dequantized-dense matmul across tile
+shapes, calibration (per-channel scales, SVD error fold), model-level
+decode parity on GQA configs, bit-exact quant-artifact and fused-const
+checkpoint round-trips, the modeled decode-bytes gate, and the committed
+BENCH_quant.json acceptance rows."""
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt_lib
+from repro.configs.base import ModelConfig, ParamConfig
+from repro.core import sltrain
+from repro.core import support as support_lib
+from repro.kernels import ops, ref
+from repro.models import registry
+from repro.quant import calibrate, layout
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _mk_linear(d_in, d_out, r, delta, seed=0, dtype=jnp.bfloat16):
+    """One row-balanced SLTrain linear in model-tree form + its flat COO."""
+    rng = np.random.default_rng(seed)
+    rows, cols = support_lib.sample_support(seed + 1, d_in, d_out, delta,
+                                            "row_balanced")
+    k = rows.shape[0] // d_in
+    v = (rng.standard_normal(rows.shape[0]) * 0.05).astype(np.float32)
+    B = (rng.standard_normal((d_in, r)) * 0.05).astype(np.float32)
+    A = (rng.standard_normal((r, d_out)) * 0.05).astype(np.float32)
+    p = {"B": jnp.asarray(B, dtype), "A": jnp.asarray(A, dtype),
+         "v": jnp.asarray(v.reshape(d_in, k), dtype)}
+    c = {"cols": jnp.asarray(cols.reshape(d_in, k))}
+    return p, c, np.asarray(rows), np.asarray(cols)
+
+
+SHAPES = [
+    (128, 128, 16, 0.03),     # single tile
+    (256, 384, 16, 0.03),     # multi-tile, non-square
+    (130, 250, 8, 0.05),      # dims not tile multiples (padding path)
+    (384, 128, 8, 0.05),      # wide-in (GQA kv-proj shape: d_out < d_in)
+]
+
+
+@pytest.mark.parametrize("d_in,d_out,r,delta", SHAPES)
+def test_quant_kernel_matches_ref_and_dequantized_dense(d_in, d_out, r,
+                                                        delta):
+    p, c, rows, cols = _mk_linear(d_in, d_out, r, delta)
+    alpha, scale = 16.0, 16.0 / r
+    vf = np.asarray(p["v"], np.float32).reshape(-1)
+    W = scale * (np.asarray(p["B"], np.float32)
+                 @ np.asarray(p["A"], np.float32))
+    Wd = W.copy()
+    Wd[rows, cols] += vf
+    scales = layout.channel_scales(Wd)
+    qv = layout.quantize_values(vf, cols, scales)
+    qc = layout.build_quant_consts(rows, cols, qv, scales, d_in, d_out,
+                                   delta, "row_balanced")
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((5, d_in)),
+                    jnp.float32)
+
+    y_k = ops.sl_quant_decode(x, p["B"], p["A"], qc["qv_t"], qc["rows_q"],
+                              qc["cols_q"], qc["qscale"], scale)
+    y_ref = ref.sl_quant_decode_ref(x, p["B"], p["A"], jnp.asarray(rows),
+                                    jnp.asarray(cols), jnp.asarray(qv),
+                                    jnp.asarray(scales), scale)
+    Wq = scale * (np.asarray(p["B"], np.float32)
+                  @ np.asarray(p["A"], np.float32))
+    Wq[rows, cols] += layout.dequantize_values(qv, cols, scales)
+    y_dense = np.asarray(x) @ Wq
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_ref, np.float32), y_dense,
+                               atol=1e-4, rtol=1e-4)
+    # the sl_matmul dispatch reaches the same kernel (consts-gated)
+    y_d = sltrain.sl_matmul(x, p, {**c, **qc}, scale, "quant")
+    np.testing.assert_allclose(np.asarray(y_d, np.float32),
+                               np.asarray(y_k, np.float32),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_quantize_linear_shapes_dtypes_and_error_fold():
+    d_in, d_out, r, delta = 256, 384, 16, 0.05
+    p, c, rows, cols = _mk_linear(d_in, d_out, r, delta)
+    outs = {}
+    for fold in (False, True):
+        np_, qc, st = calibrate.quantize_linear(
+            p, c, alpha=16.0, delta=delta, support_kind="row_balanced",
+            fold_error=fold)
+        assert np_["B"].shape == p["B"].shape and np_["B"].dtype == \
+            p["B"].dtype
+        assert np_["A"].shape == p["A"].shape and np_["A"].dtype == \
+            p["A"].dtype
+        cap = support_lib.tile_cap(d_in, d_out, delta, "row_balanced")
+        nkt, nnt = -(-d_in // 128), -(-d_out // 128)
+        assert qc["qv_t"].shape == (nkt, nnt, cap) and \
+            qc["qv_t"].dtype == jnp.int8
+        assert qc["rows_q"].dtype == jnp.int16 and \
+            qc["cols_q"].dtype == jnp.int16
+        assert qc["qscale"].shape == (nnt, 128) and \
+            qc["qscale"].dtype == jnp.float32
+        # layout geometry matches the abstract twin exactly (dry-run)
+        abstract = layout.abstract_quant_consts(d_in, d_out, delta,
+                                                "row_balanced")
+        for k in qc:
+            assert qc[k].shape == abstract[k].shape
+            assert qc[k].dtype == abstract[k].dtype
+        outs[fold] = st
+    # without fold: B/A unchanged bit-for-bit
+    np_nf, _, _ = calibrate.quantize_linear(
+        p, c, alpha=16.0, delta=delta, support_kind="row_balanced",
+        fold_error=False)
+    assert np.array_equal(np.asarray(np_nf["B"]).view(np.uint16),
+                          np.asarray(p["B"]).view(np.uint16))
+    # the SVD fold strictly reduces the dense-equivalent quant error
+    assert outs[True]["max_abs_err"] < outs[False]["max_abs_err"]
+    # symmetric codes: negation round-trips (-128 never emitted)
+    assert int(np.min(np.asarray(qc["qv_t"]))) >= -127
+
+
+def _tiny_cfg(n_kv_heads):
+    return ModelConfig(
+        name=f"quant-gqa{n_kv_heads}", family="llama",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=n_kv_heads,
+        d_ff=160, vocab_size=256, vocab_pad_multiple=16, max_seq_len=64,
+        param=ParamConfig(mode="sltrain", rank=8, delta=0.05, alpha=16.0))
+
+
+@pytest.mark.parametrize("n_kv_heads", [4, 2, 1])
+def test_model_level_quant_parity_across_gqa(n_kv_heads):
+    """Full-model apply: quant vs bf16-sparse logits stay close and agree
+    on greedy argmax, including grouped-query configs where the kv
+    projections are rectangular (d_out = n_kv_heads * head_dim < d_in)."""
+    cfg = _tiny_cfg(n_kv_heads)
+    api = registry.get_api(cfg)
+    params, consts = api.init(cfg, jax.random.PRNGKey(0), seed=0)
+    qp, qc, stats = calibrate.calibrate_model(cfg, params, consts)
+    assert stats["n_matrices"] > 0
+    tok = jnp.asarray(np.random.default_rng(1).integers(
+        3, cfg.vocab_size, size=(2, 16)), jnp.int32)
+    cfg_sp = dataclasses.replace(
+        cfg, param=dataclasses.replace(cfg.param, exec_mode="sparse"))
+    cfg_q = dataclasses.replace(
+        cfg, param=dataclasses.replace(cfg.param, exec_mode="quant"))
+    lg_sp, _ = api.apply(cfg_sp, params, consts, {"tokens": tok})
+    lg_q, _ = api.apply(cfg_q, qp, qc, {"tokens": tok})
+    a = np.asarray(lg_sp, np.float32)[..., :cfg.vocab_size]
+    b = np.asarray(lg_q, np.float32)[..., :cfg.vocab_size]
+    assert np.abs(a - b).mean() < 0.05, np.abs(a - b).mean()
+    assert (a.argmax(-1) == b.argmax(-1)).mean() >= 0.99
+
+
+def test_quant_artifact_roundtrip_bit_exact(tmp_path):
+    cfg = _tiny_cfg(2)
+    api = registry.get_api(cfg)
+    params, consts = api.init(cfg, jax.random.PRNGKey(0), seed=0)
+    qp, qc, stats = calibrate.calibrate_model(cfg, params, consts)
+    out = str(tmp_path / "artifact")
+    ckpt_lib.save_quant_artifact(out, qp, qc, config_hash="h",
+                                 extra=stats)
+    rp, rc, man = ckpt_lib.load_quant_artifact(out)
+    assert man["format"] == ckpt_lib.QUANT_FORMAT
+    assert man["extra"]["n_matrices"] == stats["n_matrices"]
+
+    def flatten(tree):
+        return {
+            "/".join(str(getattr(k, "key", k)) for k in path): leaf
+            for path, leaf in
+            jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+    for saved, loaded in ((flatten(qp), flatten(rp)),
+                          (flatten(qc), flatten(rc))):
+        assert saved.keys() == loaded.keys()
+        for key, a in saved.items():
+            b = loaded[key]
+            a, b = np.asarray(a), np.asarray(b)
+            assert a.dtype == b.dtype, key
+            view = np.uint16 if a.dtype == jnp.bfloat16 else a.dtype
+            assert np.array_equal(a.view(view), b.view(view)), key
+    # version gate: stale/foreign formats refuse to load
+    man_path = tmp_path / "artifact" / "manifest.json"
+    bad = json.loads(man_path.read_text())
+    bad["format"] = "sltrain-quant-v0"
+    man_path.write_text(json.dumps(bad))
+    with pytest.raises(ValueError, match="format"):
+        ckpt_lib.load_quant_artifact(out)
+
+
+def test_ckpt_roundtrip_fused_tile_consts_bit_identical(tmp_path):
+    """Satellite: fused-mode tile consts (rows_t/cols_t/perm) and the
+    flat bf16 v survive a CheckpointManager save/restore cycle
+    bit-for-bit — int32 consts have no tolerance to hide behind."""
+    cfg = dataclasses.replace(
+        _tiny_cfg(4),
+        param=dataclasses.replace(_tiny_cfg(4).param, exec_mode="fused"))
+    api = registry.get_api(cfg)
+    params, consts = api.init(cfg, jax.random.PRNGKey(0), seed=0)
+    cm = ckpt_lib.CheckpointManager(str(tmp_path / "ckpt"))
+    cm.save(0, {"params": params, "consts": consts}, config_hash="h")
+    tree, _ = cm.restore({"params": params, "consts": consts},
+                         config_hash="h")
+
+    flat_in = ckpt_lib._flatten_with_paths({"params": params,
+                                            "consts": consts})[0]
+    flat_out = ckpt_lib._flatten_with_paths(tree)[0]
+    assert flat_in.keys() == flat_out.keys()
+    checked = {"rows_t": 0, "cols_t": 0, "perm": 0, "v": 0}
+    for key, a in flat_in.items():
+        b = flat_out[key]
+        assert a.dtype == b.dtype and np.array_equal(a, b), key
+        leaf = key.rsplit("/", 1)[-1]
+        if leaf in checked:
+            checked[leaf] += 1
+    assert all(n > 0 for n in checked.values()), checked
+
+
+@pytest.mark.parametrize("d_in,d_out", [(512, 512), (768, 2048),
+                                        (2048, 768)])
+def test_modeled_decode_bytes_reduction_at_least_2x(d_in, d_out):
+    bf16 = layout.sparse_decode_bytes(d_in, d_out, 0.03, quant=False)
+    int8 = layout.sparse_decode_bytes(d_in, d_out, 0.03, quant=True)
+    assert bf16 / int8 >= 2.0, (d_in, d_out, bf16 / int8)
+
+
+def test_bench_snapshot_quant_gates():
+    """The committed BENCH_quant.json must carry BOTH acceptance rows
+    with passing values — the end-to-end gate, asserted on the artifact
+    so it cannot silently go stale-green."""
+    path = REPO_ROOT / "BENCH_quant.json"
+    assert path.exists(), "run: PYTHONPATH=src python -m benchmarks.run " \
+                          "--only quant"
+    rows = json.loads(path.read_text())["rows"]
+    by = {r["row"]: r for r in rows if r.get("bench") == "quant_serve"}
+    gm = by["greedy_match"]
+    from benchmarks import quant_bench
+    assert gm["match_rate"] >= quant_bench.MIN_MATCH_RATE or \
+        gm["mean_abs_dlogit"] <= quant_bench.MAX_MEAN_ABS_DLOGIT, gm
+    db = by["decode_bytes"]
+    assert db["reduction_x"] >= quant_bench.MIN_BYTES_REDUCTION, db
+
+
+def test_quant_mode_validation_everywhere():
+    cfg = _tiny_cfg(4)
+    api = registry.get_api(cfg)
+    params, consts = api.init(cfg, jax.random.PRNGKey(0), seed=0)
+    from repro.serve.engine import ServeEngine
+    # engine: quant without calibrated consts fails at construction
+    with pytest.raises(ValueError, match="calibrated consts"):
+        ServeEngine(cfg, params, consts, n_slots=1, max_len=32,
+                    exec_mode="quant")
+    with pytest.raises(ValueError, match="not both"):
+        ServeEngine(cfg, params, consts, n_slots=1, max_len=32,
+                    sparse_decode=True, exec_mode="sparse")
+    with pytest.raises(ValueError, match="unknown exec_mode"):
+        ServeEngine(cfg, params, consts, n_slots=1, max_len=32,
+                    exec_mode="int8")
+    # dispatch: quant without quant consts is a loud error
+    p, c, _, _ = _mk_linear(128, 128, 8, 0.05)
+    with pytest.raises(ValueError, match="quant"):
+        sltrain.sl_matmul(jnp.ones((2, 128)), p, c, 1.0, "quant")
+    # training rejects the serve-only mode
+    from repro.configs.base import OptimizerConfig
+    from repro.optim import optimizers
+    from repro.train import step as step_lib
+    cfg_q = dataclasses.replace(
+        cfg, param=dataclasses.replace(cfg.param, exec_mode="quant"))
+    with pytest.raises(ValueError, match="serve-only"):
+        step_lib.make_train_step(cfg_q, api,
+                                 optimizers.make(OptimizerConfig()))
+    # ...but eval still works on quant consts (ppl measurement path)
+    qp, qc, _ = calibrate.calibrate_model(cfg, params, consts)
+    ev = step_lib.make_eval_step(cfg_q, api)
+    tok = jnp.ones((1, 8), jnp.int32)
+    out = ev(qp, qc, {"tokens": tok})
+    assert np.isfinite(float(out["loss"]))
