@@ -3,7 +3,9 @@
 # dry-run through the repro.dist spec engine + the 2-device host-mesh
 # smoke (compressed-DP, per_layer x grad_accum, distributed fused) + the
 # llama_7b fsdp placement gate + paged serve smokes (gathered-view and
-# paged-attention-kernel decode). Run from anywhere.
+# paged-attention-kernel decode) + resilience smokes (chaos kill@3 ->
+# relaunch -> bit-exact resume; serve slot-stall under a deadline with
+# zero wedged requests). Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -15,12 +17,11 @@ if ! python -c "import hypothesis" 2>/dev/null; then
   # the fallback notice below stands.
   pip install -q -r requirements-dev.txt 2>/dev/null || true
 fi
+# one unambiguous machine-greppable line naming the property-test engine
 if python -c "import hypothesis" 2>/dev/null; then
-  echo "hypothesis $(python -c 'import hypothesis; print(hypothesis.__version__)') — property tests run with full shrinking (pin: requirements-dev.txt)"
+  echo "property-engine: hypothesis $(python -c 'import hypothesis; print(hypothesis.__version__)') (full shrinking; pin: requirements-dev.txt)"
 else
-  echo "!! NOTICE: hypothesis is not installed — property tests will run"
-  echo "!! on the seeded-loop fallback in tests/_propshim.py (no shrinking,"
-  echo "!! fixed examples). Install requirements-dev.txt for full coverage."
+  echo "property-engine: propshim (tests/_propshim.py seeded-loop fallback — no shrinking, fixed examples; install requirements-dev.txt for hypothesis)"
 fi
 
 echo "== tier-1: pytest =="
@@ -74,6 +75,42 @@ python -m repro.quant.calibrate --arch llama_60m --smoke \
 python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8 \
   --quant-ckpt "$QDIR/quant" --requests 4 --slots 2 --new-tokens 4 \
   --max-len 64 --metrics-out "$OBS_DIR/serve.jsonl"
+
+echo "== resilience smoke: chaos kill@3 -> relaunch -> exact resume =="
+RDIR="$(mktemp -d)"
+python -m repro.launch.train --arch llama_60m --smoke --steps 6 --batch 2 \
+  --seq 16 --log-every 1 --ckpt-every 2 --ckpt-dir "$RDIR/ref" \
+  > "$RDIR/ref.log"
+rc=0
+python -m repro.launch.train --arch llama_60m --smoke --steps 6 --batch 2 \
+  --seq 16 --log-every 1 --ckpt-every 2 --ckpt-dir "$RDIR/chaos" \
+  --chaos kill@3 > "$RDIR/killed.log" 2>&1 || rc=$?
+if [ "$rc" -ne 43 ]; then
+  echo "chaos kill did not exit 43 (got $rc)"; exit 1
+fi
+python -m repro.launch.train --arch llama_60m --smoke --steps 6 --batch 2 \
+  --seq 16 --log-every 1 --ckpt-every 2 --ckpt-dir "$RDIR/chaos" \
+  > "$RDIR/resumed.log"
+grep -q "resumed from step 2" "$RDIR/resumed.log"
+diff <(grep '^final step' "$RDIR/ref.log") \
+     <(grep '^final step' "$RDIR/resumed.log")
+echo "resilience smoke: killed at step 3 (exit 43), resumed from step 2, final loss bit-exact"
+
+echo "== resilience smoke: serve slot-stall + deadline, zero wedged =="
+python -m repro.launch.serve --arch llama_60m --smoke --paged --block-len 8 \
+  --stream --requests 4 --slots 2 --new-tokens 6 --max-len 64 \
+  --chaos "stall@4:64" --deadline-ticks 24 \
+  --metrics-out "$OBS_DIR/serve_chaos.jsonl"
+python - "$OBS_DIR" <<'EOF'
+import json, sys
+m = json.loads(open(f"{sys.argv[1]}/serve_chaos.jsonl").read()
+               .splitlines()[-1])["metrics"]
+assert m["resilience.faults_injected{kind=stall}"]["value"] > 0, m
+assert m["serve.deadline_exceeded"]["value"] > 0, \
+    "stall@4:64 under a 24-tick deadline must cancel at least one request"
+print("resilience smoke: stall injected, deadline cancellation counted, "
+      "engine drained")
+EOF
 
 echo "== obs smoke: metrics JSONL parses, traces validate =="
 python - "$OBS_DIR" <<'EOF'

@@ -14,14 +14,25 @@ Guarantees:
     device_puts onto whatever shardings the new mesh prescribes — a 256-chip
     checkpoint restores onto 512 chips (or 1 CPU) unchanged,
   * self-validating: restore checks the config hash and refuses silent
-    architecture drift (pass ``allow_config_change=True`` to migrate).
+    architecture drift (pass ``allow_config_change=True`` to migrate),
+  * corruption-detecting: the manifest records a CRC32 per array (as
+    stored, post bit-view) plus a digest over the manifest itself;
+    ``restore`` verifies both and raises :class:`CheckpointCorruptError`
+    on damage — with ``step=None`` it falls back to the newest INTACT
+    step instead of loading garbage (repro.resilience). Checkpoints
+    written before checksums existed restore unverified (back-compat).
+    Leftover ``step_<N>.tmp`` dirs from a crash mid-publish are ignored
+    by ``all_steps()`` and swept on the next save.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
+import warnings
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -29,6 +40,23 @@ import jax.numpy as jnp
 import numpy as np
 
 _SEP = "/"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification (checksum/digest
+    mismatch, unreadable npz/manifest). Distinct from config/shape
+    mismatches, which are caller errors and stay ``ValueError``."""
+
+
+def _crc(arr: np.ndarray) -> int:
+    return int(zlib.crc32(np.ascontiguousarray(arr).tobytes()))
+
+
+def _manifest_digest(manifest: Dict[str, Any]) -> str:
+    """sha256 over the canonical manifest JSON, digest field excluded."""
+    body = {k: v for k, v in manifest.items() if k != "digest"}
+    return hashlib.sha256(
+        json.dumps(body, sort_keys=True).encode()).hexdigest()
 # npz can only store native numpy dtypes; bf16/fp8 leaves are saved as raw
 # bit-views with the logical dtype recorded in the manifest.
 _BITVIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
@@ -93,6 +121,7 @@ class CheckpointManager:
              background: bool = False) -> str:
         """Snapshot ``tree`` (params/opt_state/whatever pytree) at ``step``."""
         self.wait()
+        self._clean_stale_tmp()
         # Synchronous host snapshot: training may overwrite devices after this.
         flat, dtypes = _flatten_with_paths(tree)
         manifest = {
@@ -101,7 +130,11 @@ class CheckpointManager:
             "extra": extra or {},
             "leaves": sorted(flat),
             "dtypes": dtypes,
+            # integrity: CRC32 per array AS STORED (post bit-view), plus a
+            # digest over the manifest itself — restore() verifies both
+            "checksums": {k: _crc(v) for k, v in flat.items()},
         }
+        manifest["digest"] = _manifest_digest(manifest)
         final = os.path.join(self.dir, f"step_{step:08d}")
 
         def write():
@@ -147,6 +180,14 @@ class CheckpointManager:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)
 
+    def _clean_stale_tmp(self) -> None:
+        """Sweep ``step_*.tmp`` leftovers from a crash between the tmp
+        write and ``os.replace``. Called at save() start, after wait(),
+        so no live writer owns any tmp dir."""
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
     # -- restore ---------------------------------------------------------------
     def all_steps(self):
         out = []
@@ -162,29 +203,95 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _load_verified(self, step: int, verify: bool
+                       ) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+        """Read + integrity-check one step. Raises
+        :class:`CheckpointCorruptError` on any damage: unreadable
+        manifest/npz (a flipped byte usually breaks the zip member CRC),
+        manifest digest mismatch, or per-array checksum mismatch."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except FileNotFoundError:
+            raise
+        except (OSError, ValueError, UnicodeDecodeError) as e:
+            raise CheckpointCorruptError(
+                f"{d}/manifest.json unreadable: {e}") from e
+        digest = manifest.get("digest")
+        if verify and digest is not None and \
+                _manifest_digest(manifest) != digest:
+            raise CheckpointCorruptError(f"{d}: manifest digest mismatch")
+        try:
+            with np.load(os.path.join(d, "arrays.npz")) as z:
+                flat = {k: z[k] for k in z.files}
+        except FileNotFoundError:
+            raise
+        except Exception as e:   # BadZipFile, zlib.error, ValueError, ...
+            raise CheckpointCorruptError(
+                f"{d}/arrays.npz unreadable: {e}") from e
+        sums = manifest.get("checksums")
+        if verify and sums is not None:
+            missing = set(sums) - set(flat)
+            if missing:
+                raise CheckpointCorruptError(
+                    f"{d}: arrays.npz is missing {sorted(missing)[:3]}...")
+            for key, arr in flat.items():
+                want = sums.get(key)
+                if want is None or _crc(arr) != int(want):
+                    raise CheckpointCorruptError(
+                        f"{d}: CRC32 mismatch for leaf {key!r}")
+        return flat, manifest
+
+    def verify_step(self, step: int) -> bool:
+        """True when ``step`` loads and passes its integrity checks."""
+        try:
+            self._load_verified(step, verify=True)
+            return True
+        except (CheckpointCorruptError, FileNotFoundError):
+            return False
+
     def restore(self, template: Any, *, step: Optional[int] = None,
                 config_hash: str = "", allow_config_change: bool = False,
-                shardings=None) -> Tuple[Any, Dict[str, Any]]:
+                shardings=None, verify: bool = True
+                ) -> Tuple[Any, Dict[str, Any]]:
         """Load a checkpoint into the structure of ``template``.
 
         ``shardings``: optional pytree of NamedSharding matching template —
         this is the elastic-resharding path (checkpoint written under any
-        mesh restores onto the current one)."""
+        mesh restores onto the current one).
+
+        Integrity (``verify=True``): arrays are checked against the
+        manifest's CRC32s and the manifest against its digest. An
+        explicit ``step`` that fails raises
+        :class:`CheckpointCorruptError`; ``step=None`` walks newest →
+        oldest and restores the newest INTACT step (warning per corrupt
+        one), raising only when no step survives."""
         if step is None:
-            step = self.latest_step()
-            if step is None:
+            steps = self.all_steps()
+            if not steps:
                 raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+            flat = manifest = last_err = None
+            for s in reversed(steps):
+                try:
+                    flat, manifest = self._load_verified(s, verify)
+                    break
+                except CheckpointCorruptError as e:
+                    warnings.warn(f"checkpoint step {s} is corrupt ({e}); "
+                                  "falling back to the previous step")
+                    last_err = e
+            if manifest is None:
+                raise CheckpointCorruptError(
+                    f"no intact checkpoint in {self.dir} "
+                    f"({len(steps)} corrupt)") from last_err
+        else:
+            flat, manifest = self._load_verified(step, verify)
         if config_hash and manifest["config_hash"] and \
                 manifest["config_hash"] != config_hash:
             if not allow_config_change:
                 raise ValueError(
                     f"config hash mismatch: ckpt={manifest['config_hash']} "
                     f"vs model={config_hash}")
-        with np.load(os.path.join(d, "arrays.npz")) as z:
-            flat = {k: z[k] for k in z.files}
         for key, dt in manifest.get("dtypes", {}).items():
             if dt in _BITVIEW and key in flat:
                 flat[key] = flat[key].view(jnp.dtype(dt))

@@ -91,6 +91,12 @@ class SyntheticC4:
         assert st.seed == self.state.seed, "restoring a different data seed"
         self.state = st
 
+    def skip(self, n: int) -> None:
+        """Advance the cursor ``n`` batches without generating them —
+        the trainer's divergence rollback resumes from the checkpoint but
+        takes a DIFFERENT data path past the batch that blew up."""
+        self.state = DataState(self.state.seed, self.state.step + int(n))
+
     # -- generation ----------------------------------------------------------
     def _global_rows(self, rng: np.random.Generator, n_rows: int) -> np.ndarray:
         """Vectorized Markov walk: all rows advance one position per loop

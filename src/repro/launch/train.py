@@ -96,6 +96,14 @@ def main(argv=None):
     ap.add_argument("--jax-profile-dir", default=None,
                     help="also record a jax.profiler trace into this dir "
                          "for the duration of the run")
+    ap.add_argument("--chaos", default=None,
+                    help="fault-injection spec 'kind@step[:arg],...' "
+                         "(repro.resilience.chaos), e.g. 'kill@3' or "
+                         "'nonfinite@5,straggler@4:50' — every injected "
+                         "fault must end in a verified recovery")
+    ap.add_argument("--max-rollbacks", type=int, default=2,
+                    help="checkpoint rollbacks tolerated before the "
+                         "trainer gives up on a persistent divergence")
     ap.add_argument("--multipod", action="store_true",
                     help="initialize jax.distributed from JAX_* env vars "
                          "(scripts/launch_multipod.sh sets them)")
@@ -128,6 +136,11 @@ def main(argv=None):
         from repro.dist import sharding as dist_sharding
         mesh = dist_sharding.make_local_mesh()
 
+    chaos = None
+    if args.chaos:
+        from repro.resilience.chaos import ChaosEngine
+        chaos = ChaosEngine.parse(args.chaos, seed=args.seed)
+
     tc = build_train_config(args)
     trace = obs_trace.Trace(
         enabled=bool(args.trace_out or args.jax_profile_dir),
@@ -135,7 +148,8 @@ def main(argv=None):
     trace.start()
     trainer = Trainer(tc, mesh=mesh, trace=trace,
                       metrics_out=args.metrics_out,
-                      layer_timing=args.layer_timing)
+                      layer_timing=args.layer_timing,
+                      chaos=chaos, max_rollbacks=args.max_rollbacks)
     state = trainer.run()
     trace.stop()
     print(f"final step {state.step}: "

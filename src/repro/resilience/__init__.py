@@ -1,0 +1,15 @@
+"""repro.resilience — deterministic fault injection + recovery policies.
+
+Failure is a first-class, testable input: :mod:`repro.resilience.chaos`
+turns a spec string like ``"kill@3,nonfinite@5,stall@4:8"`` into a
+deterministic fault schedule keyed on (seed, step/tick) that the trainer
+and serve engine replay exactly. The recovery side lives where the state
+lives — non-finite skip/rollback in ``train.trainer``, checksummed
+restore fallback in ``ckpt.checkpoint``, deadlines/shedding in
+``serve.engine`` — and every recovery event lands on ``repro.obs``
+counters (``resilience.*``, ``serve.rejected``,
+``serve.deadline_exceeded``).
+"""
+from repro.resilience.chaos import ChaosEngine, ChaosKill, Fault
+
+__all__ = ["ChaosEngine", "ChaosKill", "Fault"]

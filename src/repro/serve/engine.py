@@ -65,6 +65,35 @@ histograms (``serve.ttft_ticks`` exact on the tick clock,
 tick-timeline lifecycle per request (queued → prefill → decode, one lane
 per uid at 1 tick = ``trace.TICK_US`` us) whose span geometry reproduces
 each request's tick TTFT exactly.
+
+Resilience (repro.resilience; tests/test_resilience_serve.py): every
+submitted request reaches a TERMINAL ``Request.status`` — ``done``,
+``rejected``, ``timed_out``, or ``failed`` — the engine never silently
+loses one.
+
+* **Load shedding** — ``max_queue`` caps the admission queue; a submit
+  past the cap returns the request immediately with
+  ``status="rejected"`` and a structured ``fail_reason`` (counted on
+  ``serve.rejected``) instead of growing the queue without bound.
+* **Deadlines** — ``deadline_ticks`` (per request or engine default;
+  launcher ``--deadline-ticks``) and/or a wall deadline (``deadline_ms``)
+  cancel a request that has not completed within its budget of arrival:
+  its slot's pages/refcounts are released through ``sched.finish`` and it
+  lands in ``status="timed_out"`` (counted on ``serve.deadline_exceeded``).
+* **Fault injection** — ``tick_hook`` runs at the top of every engine
+  step (``ChaosEngine.serve_hook`` wires the ``stall@T:K`` fault);
+  :meth:`stall_slot` freezes a slot for K ticks — the loop decodes around
+  it, and when EVERY active slot is stalled the clock still advances so
+  stalls and deadlines expire instead of spinning.
+* **Budget exhaustion** — a run loop that exhausts ``max_steps`` marks
+  the survivors ``status="failed"`` with a structured reason and returns
+  a nonzero-aware ``summary``; the requests stay queued/resident, so
+  calling the run loop again resumes and finishes them.
+* **Quant fallback** — ``quant_fallback=True`` lets an
+  ``exec_mode="quant"`` engine whose consts fail artifact validation
+  degrade to the validated bf16 ``sparse`` path (warn + counted on
+  ``serve.quant_fallback``) instead of refusing to serve; the default
+  remains fail-at-construction.
 """
 from __future__ import annotations
 
@@ -116,6 +145,14 @@ class Request:
     wall_admit: Optional[float] = None
     wall_first: Optional[float] = None
     wall_done: Optional[float] = None
+    # resilience: lifecycle status (queued → active → one of the terminal
+    # states done/rejected/timed_out/failed), the structured reason for a
+    # non-done terminal state, and the completion deadline as a tick
+    # budget from ``arrival`` (None = no deadline; the engine-level wall
+    # deadline applies independently)
+    status: str = "queued"
+    fail_reason: Optional[str] = None
+    deadline_ticks: Optional[int] = None
 
 
 class ServeEngine:
@@ -126,7 +163,11 @@ class ServeEngine:
                  attn_kernel: Optional[str] = None,
                  prefix_sharing: bool = False,
                  obs: Optional[obs_metrics.Registry] = None,
-                 trace: Optional[obs_trace.Trace] = None):
+                 trace: Optional[obs_trace.Trace] = None,
+                 max_queue: Optional[int] = None,
+                 deadline_ticks: Optional[int] = None,
+                 deadline_ms: Optional[float] = None,
+                 tick_hook=None, quant_fallback: bool = False):
         if exec_mode is not None:
             # explicit serve-time execution mode (supersedes the bool
             # sparse_decode shorthand; "quant" is the int8 artifact path)
@@ -144,18 +185,36 @@ class ServeEngine:
         if sparse_decode and cfg.param.mode == "sltrain":
             cfg = dataclasses.replace(
                 cfg, param=dataclasses.replace(cfg.param, exec_mode="sparse"))
+        quant_fell_back = False
         if cfg.param.mode == "sltrain" and cfg.param.exec_mode == "quant":
             # fail at construction, not first dispatch: quant decode needs
             # the calibrated int8 consts from a quant artifact
-            leaf_names = {p[-1].key if hasattr(p[-1], "key") else str(p[-1])
-                          for p, _ in
-                          jax.tree_util.tree_flatten_with_path(consts)[0]}
-            if "qv_t" not in leaf_names:
-                raise ValueError(
-                    "exec_mode='quant' needs calibrated consts (qv_t/rows_q/"
-                    "cols_q/qscale) — load a repro.quant artifact "
-                    "(python -m repro.quant.calibrate) and pass its "
-                    "params/consts")
+            def _leaf_names(tree):
+                return {p[-1].key if hasattr(p[-1], "key") else str(p[-1])
+                        for p, _ in
+                        jax.tree_util.tree_flatten_with_path(tree)[0]}
+            if "qv_t" not in _leaf_names(consts):
+                # quant_fallback: degrade to the bf16 sparse path instead,
+                # but only after validating the factored sparse leaves the
+                # fallback needs actually exist — a blind downgrade would
+                # just move the failure to the first dispatch
+                if quant_fallback and "cols" in _leaf_names(consts) and \
+                        "v" in _leaf_names(params):
+                    import warnings
+                    warnings.warn(
+                        "quant artifact validation failed (consts lack "
+                        "qv_t): serving degraded to exec_mode='sparse' "
+                        "(bf16 factored decode)")
+                    cfg = dataclasses.replace(
+                        cfg, param=dataclasses.replace(cfg.param,
+                                                       exec_mode="sparse"))
+                    quant_fell_back = True
+                else:
+                    raise ValueError(
+                        "exec_mode='quant' needs calibrated consts (qv_t/"
+                        "rows_q/cols_q/qscale) — load a repro.quant "
+                        "artifact (python -m repro.quant.calibrate) and "
+                        "pass its params/consts")
         if attn_kernel is not None:
             cfg = dataclasses.replace(cfg, attn_kernel=attn_kernel)
         if cfg.attn_kernel not in ("gather", "paged"):
@@ -271,6 +330,26 @@ class ServeEngine:
         self._dispatches_view = obs_metrics.MetricView(self._c_disp)
         self._prefill_view = obs_metrics.MetricView(self._c_prefill)
         self._kv_view = obs_metrics.MetricView(self._c_kv)
+        # -- resilience (module docstring: Resilience section) ------------
+        self.max_queue = max_queue
+        self.default_deadline_ticks = deadline_ticks
+        self._deadline_s = None if deadline_ms is None else deadline_ms / 1e3
+        self.tick_hook = tick_hook
+        self._stall_until: Dict[int, int] = {}
+        self.rejected: List[Request] = []
+        self.timed_out: List[Request] = []
+        self._c_rejected = self.obs.counter(
+            "serve.rejected",
+            help="requests shed at submit (admission queue at max_queue)")
+        self._c_deadline = self.obs.counter(
+            "serve.deadline_exceeded",
+            help="requests cancelled past their tick/wall deadline")
+        self._c_qfall = self.obs.counter(
+            "serve.quant_fallback",
+            help="quant engines degraded to bf16-sparse at construction")
+        if quant_fell_back:
+            self._c_qfall.inc()
+        self.quant_fell_back = quant_fell_back
 
     # -- legacy counter-dict views + measurement reset ------------------------
     @property
@@ -305,7 +384,8 @@ class ServeEngine:
 
     # -- API --------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
-               arrival: Optional[int] = None) -> Request:
+               arrival: Optional[int] = None,
+               deadline_ticks: Optional[int] = None) -> Request:
         """Queue a request. Invalid prompts are rejected HERE so a bad
         request can never wedge the engine from inside step().
 
@@ -313,7 +393,12 @@ class ServeEngine:
         visible to the stream loop — :meth:`run_stream` will not admit it
         before then (and fast-forwards an idle engine's clock to it). The
         default 0 means "already arrived", which is what the drain-style
-        entry points assume."""
+        entry points assume. ``deadline_ticks`` overrides the engine-level
+        completion deadline for this request (budget from ``arrival``).
+
+        With ``max_queue`` set, a submit past the cap is SHED rather than
+        queued: the returned request carries ``status="rejected"`` and a
+        structured ``fail_reason`` — callers must check the status."""
         if not prompt:
             raise ValueError("empty prompt")
         if len(prompt) >= self.max_len:
@@ -332,8 +417,21 @@ class ServeEngine:
         self._uid += 1
         req = Request(self._uid, list(prompt), max_new_tokens,
                       arrival=int(arrival or 0),
-                      wall_arrival=time.perf_counter())
+                      wall_arrival=time.perf_counter(),
+                      deadline_ticks=(deadline_ticks
+                                      if deadline_ticks is not None
+                                      else self.default_deadline_ticks))
         self._c_sub.inc()
+        queue = self.sched.queue if self.paged else self.queue
+        if self.max_queue is not None and len(queue) >= self.max_queue:
+            # load shedding: reject at admission instead of growing the
+            # queue without bound — the terminal status IS the signal
+            req.status = "rejected"
+            req.fail_reason = (f"admission queue full ({len(queue)} queued "
+                               f">= max_queue={self.max_queue})")
+            self.rejected.append(req)
+            self._c_rejected.inc()
+            return req
         if self.paged:
             self.sched.submit(req)
         else:
@@ -342,6 +440,8 @@ class ServeEngine:
 
     def _complete(self, req: Request) -> None:
         req.done = True
+        req.status = "done"
+        req.fail_reason = None
         req.t_done = self.clock
         req.wall_done = time.perf_counter()
         self.completed.append(req)
@@ -380,6 +480,112 @@ class ServeEngine:
                          dur_us=(req.t_done - tf) * k, tid=req.uid,
                          cat="request", args=args)
 
+    # -- resilience: stalls, deadlines, budget exhaustion ---------------------
+    def stall_slot(self, slot: int, ticks: int) -> None:
+        """Freeze ``slot`` until the engine clock passes ``clock + ticks``
+        (fault injection: ``ChaosEngine``'s ``stall@T:K``). The decode
+        loop steps AROUND a stalled slot — its position does not advance
+        and no token is consumed — and resumes it once the horizon passes.
+        Repeated stalls extend, never shorten, the horizon."""
+        self._stall_until[slot] = max(self._stall_until.get(slot, 0),
+                                      self.clock + int(ticks))
+
+    def _deadline_exceeded(self, req: Request, now: int) -> bool:
+        if req.deadline_ticks is not None and \
+                now - req.arrival >= req.deadline_ticks:
+            return True
+        if self._deadline_s is not None and req.wall_arrival is not None \
+                and time.perf_counter() - req.wall_arrival > self._deadline_s:
+            return True
+        return False
+
+    def _cancel(self, req: Request, reason: str) -> None:
+        """Terminal-state a request that missed its deadline. The caller
+        releases any slot/block state; this records the outcome."""
+        req.status = "timed_out"
+        req.fail_reason = reason
+        req.t_done = self.clock
+        req.wall_done = time.perf_counter()
+        req.resume = None
+        self.timed_out.append(req)
+        self._c_deadline.inc()
+        if self.trace.enabled:
+            self.trace.event("timed_out",
+                             ts_us=self.clock * obs_trace.TICK_US, dur_us=0,
+                             tid=req.uid, cat="request",
+                             args={"uid": req.uid, "reason": reason})
+
+    def _expire_deadlines(self, now: int) -> None:
+        """Cancel queued AND active requests past their tick/wall
+        deadline. An active slot's pages and prefix refcounts go back to
+        the pool through ``sched.finish`` — a timed-out request can never
+        pin KV blocks — and any stall on the slot is cleared so the freed
+        slot is immediately admissible."""
+        queue = self.sched.queue if self.paged else self.queue
+        for req in [r for r in queue if self._deadline_exceeded(r, now)]:
+            queue.remove(req)
+            self._cancel(req, f"deadline exceeded at tick {now} while "
+                              "queued (never admitted)")
+        if self.paged:
+            for s in list(self.sched.active_slots):
+                req = self.sched.slot_req[s]
+                if self._deadline_exceeded(req, now):
+                    self._cancel(req, f"deadline exceeded at tick {now} "
+                                      f"with {len(req.out)} tokens decoded")
+                    self.sched.finish(s)
+                    self._stall_until.pop(s, None)
+        else:
+            for s in range(self.n_slots):
+                req = self.slot_req[s]
+                if req is not None and self._deadline_exceeded(req, now):
+                    self._cancel(req, f"deadline exceeded at tick {now} "
+                                      f"with {len(req.out)} tokens decoded")
+                    self.slot_req[s] = None
+                    self._stall_until.pop(s, None)
+
+    def _revive_failed(self) -> None:
+        """A prior bounded run marked the survivors ``failed``; they are
+        still queued/resident, so a new run loop call RESUMES them — flip
+        them back to live statuses first."""
+        queue = self.sched.queue if self.paged else self.queue
+        for req in self._unfinished():
+            if req.status == "failed":
+                req.status = "queued" if any(req is q for q in queue) \
+                    else "active"
+                req.fail_reason = None
+
+    def _finish_run(self, max_steps: int, warn: bool) -> Dict[str, Any]:
+        """Shared run-loop epilogue: every surviving request gets a
+        TERMINAL ``failed`` status with a structured reason (it stays
+        queued/resident — calling the run loop again resumes it), and the
+        return dict carries a nonzero-aware ``summary`` plus the
+        timed_out/rejected lists so no request outcome is silent."""
+        unfinished = self._unfinished()
+        for req in unfinished:
+            req.status = "failed"
+            req.fail_reason = (
+                f"run loop budget exhausted (max_steps={max_steps}) before "
+                "completion; the request is still resident — call the run "
+                "loop again to resume it")
+        if unfinished and warn:
+            import warnings
+            warnings.warn(f"run_until_drained: max_steps={max_steps} "
+                          f"exhausted with {len(unfinished)} requests still "
+                          "queued or mid-decode (see the 'unfinished' list)")
+        summary = {"done": len(self.completed)}
+        for key, n in (("failed", len(unfinished)),
+                       ("timed_out", len(self.timed_out)),
+                       ("rejected", len(self.rejected))):
+            if n:
+                summary[key] = n
+        return {"decode_steps": self._steps,
+                "completed": list(self.completed),
+                "unfinished": unfinished,
+                "exhausted": bool(unfinished),
+                "timed_out": list(self.timed_out),
+                "rejected": list(self.rejected),
+                "summary": summary}
+
     # -- paged path ---------------------------------------------------------
     def _admit_paged(self, now: Optional[int] = None) -> None:
         """Admit queued requests and run ONE batched prefill over them.
@@ -399,6 +605,7 @@ class ServeEngine:
         pt = self._c_prefill
         for s, req in admitted:
             req.t_admit, req.wall_admit = t_admit, wall_admit
+            req.status = "active"
             n = len(req.prompt if req.resume is None else req.resume)
             pt["tokens_total"].inc(n)
             pt["tokens_prefilled"].inc(n - int(offsets[s]))
@@ -435,6 +642,7 @@ class ServeEngine:
             if len(req.out) >= req.max_new_tokens:
                 self._complete(req)
                 self.sched.finish(s)
+                self._stall_until.pop(s, None)
 
     def _evict_for_progress(self, active) -> None:
         """All active slots are parked: preempt the youngest request so the
@@ -456,19 +664,32 @@ class ServeEngine:
                 "n_blocks or lower n_slots/max_len")
 
     def _step_paged(self, now: Optional[int] = None) -> int:
+        if self.tick_hook is not None:
+            self.tick_hook(self)
+        self._expire_deadlines(self.clock if now is None else now)
         self._admit_paged(now)
         active = self.sched.active_slots
         if not active:
             return 0
+        runnable = [s for s in active
+                    if self._stall_until.get(s, 0) <= self.clock]
+        if not runnable:
+            # EVERY active slot is stalled: burn a tick anyway so stalls
+            # and deadlines expire instead of the loop spinning forever
+            self.clock += 1
+            return 0
         # grow pages for this step's write; slots the pool cannot hold are
         # parked (they retry once other requests release blocks)
-        ready = set(self.sched.ensure_decode_blocks(active))
-        self._parked = bool(set(active) - ready)
+        ready = set(self.sched.ensure_decode_blocks(runnable))
+        self._parked = bool(set(runnable) - ready)
         if not ready:
-            self._evict_for_progress(active)
+            self._evict_for_progress(runnable)
             return 0
+        # stalled slots keep tok=0: their garbage K/V write lands at a
+        # position their pos never advanced past, so the real token
+        # overwrites it before it first becomes attendable
         tok = np.zeros((self.n_slots, 1), np.int32)
-        for s in active:
+        for s in ready:
             tok[s, 0] = self.sched.slot_req[s].out[-1]
         pos_vec = self.sched.decode_positions()
         t = self._c_kv
@@ -497,6 +718,7 @@ class ServeEngine:
                     int(self.sched.pos[s]) >= self.max_len - 1:
                 self._complete(req)
                 self.sched.finish(s)
+                self._stall_until.pop(s, None)
         return len(ready)
 
     # -- legacy contiguous path ----------------------------------------------
@@ -508,6 +730,7 @@ class ServeEngine:
         paged prefill's semantics."""
         self.pos[slot] = 0
         req.t_admit, req.wall_admit = self.clock, time.perf_counter()
+        req.status = "active"
         nxt = None
         for t in req.prompt:
             tok = np.zeros((self.n_slots, 1), np.int32)
@@ -536,30 +759,38 @@ class ServeEngine:
                     self.slot_req[s] = req
 
     def _step_legacy(self) -> int:
+        if self.tick_hook is not None:
+            self.tick_hook(self)
+        self._expire_deadlines(self.clock)
         self._refill()
         active = [s for s in range(self.n_slots) if self.slot_req[s]]
         if not active:
             return 0
+        runnable = [s for s in active
+                    if self._stall_until.get(s, 0) <= self.clock]
+        if not runnable:
+            self.clock += 1   # all stalled: burn a tick so stalls expire
+            return 0
         tok = np.zeros((self.n_slots, 1), np.int32)
-        for s in active:
+        for s in runnable:
             req = self.slot_req[s]
             tok[s, 0] = req.out[-1]
         # NOTE single shared index: the legacy engine steps slots at their
         # own pos via per-slot prefill; decode uses the max pos (a lagging
         # slot's K/V is written at that offset — the wart the paged path's
         # per-slot index vector removes).
-        idx = int(max(self.pos[s] for s in active))
+        idx = int(max(self.pos[s] for s in runnable))
         self._c_disp["decode"].inc()
         self.clock += 1
         with self.trace.span("serve.decode_dispatch", cat="engine",
-                             slots=len(active)):
+                             slots=len(runnable)):
             nxt, _, self.cache = self._run(
                 self._decode_fn, self.params, self.consts, jnp.asarray(tok),
                 self.cache, jnp.int32(idx))
         with self.trace.span("serve.block_until_ready", cat="engine"):
             nxt = np.asarray(nxt)
         self._steps += 1
-        for s in active:
+        for s in runnable:
             req = self.slot_req[s]
             req.out.append(int(nxt[s, 0]))
             self.pos[s] += 1
@@ -567,7 +798,8 @@ class ServeEngine:
                     self.pos[s] >= self.max_len - 1:
                 self._complete(req)
                 self.slot_req[s] = None
-        return len(active)
+                self._stall_until.pop(s, None)
+        return len(runnable)
 
     def step(self) -> int:
         """One engine step: admit + (batched prefill) + one batched decode
@@ -595,23 +827,18 @@ class ServeEngine:
         Drain-style entry point: arrival timestamps are IGNORED — whatever
         is queued is admissible immediately (the caller decided to drain
         it). Returns {"decode_steps": int, "completed": [Request, ...],
-        "unfinished": [Request, ...], "exhausted": bool} — ``exhausted``
-        is True when max_steps was used up with requests still queued or
-        mid-decode, and ``unfinished`` holds exactly those requests."""
+        "unfinished": [Request, ...], "exhausted": bool, "timed_out":
+        [...], "rejected": [...], "summary": {...}} — ``exhausted`` is
+        True when max_steps was used up with requests still queued or
+        mid-decode; those requests land in ``unfinished`` with
+        ``status="failed"`` and a structured reason, but stay resident:
+        calling the run loop again resumes them."""
+        self._revive_failed()
         for _ in range(max_steps):
             if not self._has_work():
                 break
             self.step()
-        unfinished = self._unfinished()
-        if unfinished:
-            import warnings
-            warnings.warn(f"run_until_drained: max_steps={max_steps} "
-                          f"exhausted with {len(unfinished)} requests still "
-                          "queued or mid-decode (see the 'unfinished' list)")
-        return {"decode_steps": self._steps,
-                "completed": list(self.completed),
-                "unfinished": unfinished,
-                "exhausted": bool(unfinished)}
+        return self._finish_run(max_steps, warn=True)
 
     def run_stream(self, max_steps: int = 100_000) -> Dict[str, Any]:
         """Continuous batching: admission happens INSIDE the decode loop.
@@ -631,6 +858,7 @@ class ServeEngine:
             raise ValueError("run_stream requires the paged engine "
                              "(paged=True): continuous admission recycles "
                              "slots through the block-table scheduler")
+        self._revive_failed()
         for _ in range(max_steps):
             if not self._has_work():
                 break
@@ -639,8 +867,4 @@ class ServeEngine:
                 if nxt is not None and nxt > self.clock:
                     self.clock = nxt      # idle engine: jump to next arrival
             self._step_paged(now=self.clock)
-        unfinished = self._unfinished()
-        return {"decode_steps": self._steps,
-                "completed": list(self.completed),
-                "unfinished": unfinished,
-                "exhausted": bool(unfinished)}
+        return self._finish_run(max_steps, warn=False)

@@ -181,12 +181,16 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
             hp["lm_head"] = params["lm_head"]
         return hp
 
-    def head_ce(hp, emb, h_top, tokens):
+    def head_ce(hp, emb, h_top, tokens, scale=None):
         full = dict(hp)
         if tied:
             full["embed"] = emb
         logits = plapi.head(cfg, full, h_top)
-        return cross_entropy(logits[:, :-1], tokens[:, 1:], cfg.vocab_size)
+        ce = cross_entropy(logits[:, :-1], tokens[:, 1:], cfg.vocab_size)
+        # chaos poison (repro.resilience): a NaN scale flows through the
+        # head vjp into every boundary cotangent, so BOTH sweeps see
+        # genuinely non-finite gradients (and gnorm goes NaN with them)
+        return ce if scale is None else ce * scale
 
     def stack_fns(group):
         """(layer_fn, params_key) for one stacked group."""
@@ -321,6 +325,9 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
     def train_step(params, opt_state, consts, batch):
         tokens = batch["tokens"]
         patches = batch.get("patches")
+        chaos_scale = None
+        if "chaos_scale" in batch:
+            chaos_scale = jnp.mean(batch["chaos_scale"].astype(jnp.float32))
 
         # ---- forward, saving per-layer boundaries -----------------------
         # grad_accum == 1: one forward, saves are (n_layers, B, S, d).
@@ -366,8 +373,8 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
 
         if n_mb == 1:
             ce, head_pull = jax.vjp(
-                lambda hp_, h_: head_ce(hp_, emb0, h_, tokens), hp,
-                bnd["h_top"])
+                lambda hp_, h_: head_ce(hp_, emb0, h_, tokens, chaos_scale),
+                hp, bnd["h_top"])
 
             def head_grads():
                 d_head, dh = head_pull(jnp.float32(1.0))
@@ -380,8 +387,8 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
                     h_m, t_m = mb
                     g_acc, ce_acc = carry
                     ce_m, pull = jax.vjp(
-                        lambda hp_, h_: head_ce(hp_, emb0, h_, t_m), hp,
-                        h_m)
+                        lambda hp_, h_: head_ce(hp_, emb0, h_, t_m,
+                                                chaos_scale), hp, h_m)
                     dhp_m, dh_m = pull(jnp.float32(1.0))
                     g_acc = jax.tree.map(
                         lambda a, g: a + g.astype(jnp.float32), g_acc,
@@ -400,13 +407,15 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
         def head_embed_cotangent():
             if n_mb == 1:
                 _, pull = jax.vjp(
-                    lambda e: head_ce(hp, e, bnd["h_top"], tokens),
+                    lambda e: head_ce(hp, e, bnd["h_top"], tokens,
+                                      chaos_scale),
                     params["embed"])
                 return pull(jnp.float32(1.0))[0]
 
             def hb(acc, mb):
                 h_m, t_m = mb
-                _, pull = jax.vjp(lambda e: head_ce(hp, e, h_m, t_m),
+                _, pull = jax.vjp(lambda e: head_ce(hp, e, h_m, t_m,
+                                                    chaos_scale),
                                   params["embed"])
                 return acc + pull(jnp.float32(1.0))[0].astype(jnp.float32), None
             zeros = jnp.zeros(params["embed"].shape, jnp.float32)
@@ -491,7 +500,17 @@ def make_perlayer_train_step(cfg: ModelConfig, api: ModelApi,
         state = optimizer.with_leaf_state(state, ("embed",), nls)
 
         state = optimizer.finish(state, ctx)
-        metrics = {"loss": loss, "ce": ce, "aux": aux_total, **stats}
+        # divergence guard (repro.resilience): gnorm comes from the norm
+        # sweep's exact global reduction, so it is non-finite iff ANY
+        # layer's gradient is — together with the loss that is the whole
+        # detection, two scalar isfinite ops. The in-sweep updates already
+        # happened, so select every leaf back to its pre-step value.
+        good = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+        sel = lambda n, o: jnp.where(good, n, o)                 # noqa: E731
+        new_params = jax.tree.map(sel, new_params, params)
+        state = jax.tree.map(sel, state, opt_state)
+        metrics = {"loss": loss, "ce": ce, "aux": aux_total, **stats,
+                   "nonfinite": 1.0 - good.astype(jnp.float32)}
         return new_params, state, metrics
 
     return train_step

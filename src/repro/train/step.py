@@ -30,8 +30,32 @@ def make_loss_fn(cfg: ModelConfig, api: ModelApi, remat: str = "none",
         logits, aux = api.apply(cfg, params, consts, batch, remat=remat)
         toks = batch["tokens"]
         ce = cross_entropy(logits[:, :-1], toks[:, 1:], cfg.vocab_size)
-        return ce + aux_coef * aux, {"ce": ce, "aux": aux}
+        loss = ce + aux_coef * aux
+        if "chaos_scale" in batch:
+            # fault injection (repro.resilience): a NaN scale poisons the
+            # loss through the real vjp so non-finite detection sees
+            # genuine NaN gradients, not a synthetic flag. The key is
+            # present every step of a chaos run (value 1.0 off-fault) so
+            # the pytree structure — and the compiled program — is stable.
+            loss = loss * jnp.mean(batch["chaos_scale"].astype(jnp.float32))
+        return loss, {"ce": ce, "aux": aux}
     return loss_fn
+
+
+def nonfinite_gate(loss, grads, new_state, old_state):
+    """Skip-step gate: one fused isfinite reduction over loss + grads;
+    when anything is non-finite, every leaf of ``new_state`` (a tuple of
+    trees, e.g. (params, opt_state)) is replaced by its ``old_state``
+    counterpart. Bit-exact identity when finite (``jnp.where`` on a true
+    scalar predicate selects the new operand unchanged). Returns
+    (gated_state, nonfinite) with ``nonfinite`` a 0/1 f32 metric."""
+    good = jnp.isfinite(loss)
+    for g in jax.tree.leaves(grads):
+        if jnp.issubdtype(g.dtype, jnp.inexact):
+            good = good & jnp.isfinite(g).all()
+    gated = jax.tree.map(lambda n, o: jnp.where(good, n, o),
+                         new_state, old_state)
+    return gated, 1.0 - good.astype(jnp.float32)
 
 
 def make_train_step(cfg: ModelConfig, api: ModelApi, optimizer: Optimizer,
@@ -90,7 +114,12 @@ def make_train_step(cfg: ModelConfig, api: ModelApi, optimizer: Optimizer,
             parts = jax.tree.map(lambda x: x / grad_accum, parts)
         grads = pin(grads)
         new_params, new_opt, stats = optimizer.update(grads, opt_state, params)
-        metrics = {"loss": loss, **parts, **stats}
+        # divergence guard (repro.resilience): a non-finite loss/grad must
+        # never reach the weights — select the pre-step state instead and
+        # report it so the trainer can escalate (skip → rollback)
+        (new_params, new_opt), nonfinite = nonfinite_gate(
+            loss, grads, (new_params, new_opt), (params, opt_state))
+        metrics = {"loss": loss, **parts, **stats, "nonfinite": nonfinite}
         return new_params, new_opt, metrics
 
     return train_step
@@ -203,7 +232,12 @@ def make_compressed_dp_step(cfg: ModelConfig, api: ModelApi,
         loss = jax.lax.pmean(loss, pod_axis)
         new_params, new_opt, stats = optimizer.update(grads, opt_state,
                                                       params)
-        return new_params, new_opt, {"loss": loss, **stats}
+        # post-psum grads are identical on every pod, so the gate (and its
+        # skip decision) is replicated — no pod diverges from the others
+        (new_params, new_opt), nonfinite = nonfinite_gate(
+            loss, grads, (new_params, new_opt), (params, opt_state))
+        return new_params, new_opt, {"loss": loss, **stats,
+                                     "nonfinite": nonfinite}
 
     rep = P()  # replicated across the pod axis
 
@@ -220,7 +254,8 @@ def make_compressed_dp_step(cfg: ModelConfig, api: ModelApi,
             in_specs=(specs_like(params), specs_like(opt_state),
                       specs_like(consts), specs_like(batch, True)),
             out_specs=(specs_like(params), specs_like(opt_state),
-                       {"loss": rep, "grad_norm": rep, "lr": rep}),
+                       {"loss": rep, "grad_norm": rep, "lr": rep,
+                        "nonfinite": rep}),
             check_vma=False,
         )(params, opt_state, consts, batch)
 

@@ -1,5 +1,5 @@
 """Training loop: logging, checkpoint/restart, preemption handling,
-straggler watchdog, fault-injection hooks (DESIGN §7).
+straggler watchdog, fault injection + divergence recovery (DESIGN §7).
 
 The loop is deliberately framework-grade rather than script-grade:
   * resume-from-latest is the default (idempotent relaunch == restart),
@@ -10,6 +10,32 @@ The loop is deliberately framework-grade rather than script-grade:
     we log and continue, on a fleet the launcher wires in spares,
   * ``fault_hook(step)`` lets tests inject crashes at exact steps to prove
     kill/resume bit-exactness (tests/test_fault_tolerance.py).
+
+Resilience (repro.resilience; tests/test_fault_tolerance.py):
+  * **fault matrix** — pass ``chaos=ChaosEngine.parse(spec)`` (launcher
+    flag ``--chaos``, e.g. ``"kill@3,nonfinite@5,straggler@4:50"``) and
+    the loop deterministically injects process kills (exit 43),
+    NaN-poisoned losses, corrupted checkpoint bytes, corrupted data
+    batches, and straggler sleeps at exact steps,
+  * **escalation policy** — every step's jitted program carries a
+    non-finite gate (train/step.py, train/perlayer.py): a NaN/inf loss or
+    gradient never reaches the weights (the update is skipped bit-exactly
+    in-jit) and is reported via ``metrics["nonfinite"]``. After
+    ``max_skips`` consecutive skipped steps the trainer ROLLS BACK to the
+    newest intact checkpoint and skips the data cursor forward
+    (``rollback_data_skip`` batches, doubling per rollback — the retry
+    backoff); after ``max_rollbacks`` rollbacks (``--max-rollbacks``) it
+    gives up loudly,
+  * **corrupt batches** — host-side token validation drops out-of-range
+    batches and advances the cursor (bounded retries),
+  * **checksummed checkpoints** — restore verifies per-array CRC32s +
+    the manifest digest and falls back to the newest intact step
+    (ckpt/checkpoint.py), so a flipped byte costs one ckpt_every of
+    progress, not the run.
+  Every recovery event lands on the obs registry:
+  ``resilience.faults_injected{kind}``, ``resilience.nonfinite_steps``,
+  ``resilience.rollbacks``, ``resilience.bad_batches``, plus
+  ``resilience.rollback``/``resilience.restore`` trace spans.
 """
 from __future__ import annotations
 
@@ -25,7 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis import roofline
-from repro.ckpt.checkpoint import CheckpointManager
+from repro.ckpt.checkpoint import CheckpointCorruptError, CheckpointManager
 from repro.configs.base import TrainConfig
 from repro.core import relora as relora_lib
 from repro.data.pipeline import SyntheticC4
@@ -124,6 +150,8 @@ class StepTimeWatchdog:
 class Trainer:
     def __init__(self, tc: TrainConfig, *, mesh=None, log_fn=print,
                  fault_hook: Optional[Callable[[int], None]] = None,
+                 chaos=None, max_skips: int = 2, max_rollbacks: int = 2,
+                 rollback_data_skip: int = 1,
                  obs: Optional[obs_metrics.Registry] = None,
                  trace: Optional[obs_trace.Trace] = None,
                  metrics_out: Optional[str] = None,
@@ -132,6 +160,13 @@ class Trainer:
         self.mesh = mesh
         self.log = log_fn
         self.fault_hook = fault_hook
+        # -- resilience policy (module docstring: escalation policy) --
+        self.chaos = chaos
+        self.max_skips = max_skips
+        self.max_rollbacks = max_rollbacks
+        self.rollback_data_skip = rollback_data_skip
+        self._skip_streak = 0
+        self._rollbacks = 0
         self.cfg = tc.model
         self.api = registry.get_api(self.cfg)
         self.optimizer = optimizers.make(tc.optim)
@@ -168,6 +203,17 @@ class Trainer:
             help="per-step phase split: data | dispatch | sync")
         self._h_phase = {k: phase_h.labels(phase=k)
                          for k in ("data", "dispatch", "sync")}
+        self._c_nonfinite = self.obs.counter(
+            "resilience.nonfinite_steps",
+            help="steps whose update was skipped (non-finite loss/grads)")
+        self._c_rollbacks = self.obs.counter(
+            "resilience.rollbacks",
+            help="rollbacks to the newest intact checkpoint")
+        self._c_bad_batches = self.obs.counter(
+            "resilience.bad_batches",
+            help="corrupt data batches dropped by host-side validation")
+        if self.chaos is not None:
+            self.chaos.bind(self.obs)
 
         self._layer_timing = layer_timing
         self._train_step = self._build_train_step(grad_specs=None)
@@ -255,16 +301,65 @@ class Trainer:
 
     def restore_or_init(self) -> TrainerState:
         state = self.init_state()
-        latest = self.ckpt.latest_step()
-        if latest is None:
+        if self.ckpt.latest_step() is None:
             return state
-        tree, manifest = self.ckpt.restore(
-            {"params": state.params, "opt_state": state.opt_state},
-            step=latest, config_hash=self.cfg.hash())
+        try:
+            with self.trace.span("resilience.restore", cat="resilience"):
+                # step=None: checksum-verified, falls back newest → oldest
+                # past corrupt checkpoints (ckpt/checkpoint.py)
+                tree, manifest = self.ckpt.restore(
+                    {"params": state.params, "opt_state": state.opt_state},
+                    config_hash=self.cfg.hash())
+        except CheckpointCorruptError as e:
+            self.log(f"[trainer] every checkpoint failed verification "
+                     f"({e}): starting fresh")
+            return state
         self.data.restore(manifest["extra"]["data"])
+        latest = int(manifest["step"])
         self.log(f"[trainer] resumed from step {latest}")
         return TrainerState(tree["params"], tree["opt_state"], state.consts,
                             step=latest)
+
+    # -- resilience (module docstring: escalation policy) ---------------------
+    def _next_valid_batch(self, step: int):
+        """Next data batch, host-validated; corrupt batches (chaos or a
+        real pipeline fault) are dropped and the cursor advances."""
+        for _ in range(8):
+            batch = self.data.next_batch()
+            if self.chaos is not None:
+                batch = self.chaos.corrupt_batch(step, batch)
+            toks = batch["tokens"]
+            if toks.dtype.kind in "iu" and \
+                    bool(((toks >= 0) & (toks < self.cfg.vocab_size)).all()):
+                return batch
+            self._c_bad_batches.inc()
+            self.log(f"[trainer] corrupt batch at step {step + 1}: "
+                     "dropped, data cursor advanced")
+        raise RuntimeError("data pipeline produced 8 consecutive corrupt "
+                           "batches — not a transient fault, giving up")
+
+    def _rollback(self, reason: str) -> TrainerState:
+        """Divergence escalation: restore the newest intact checkpoint and
+        skip the data cursor past the offending batches (skip doubles per
+        rollback — the retry backoff). Bounded by ``max_rollbacks``."""
+        self._rollbacks += 1
+        self._c_rollbacks.inc()
+        if self._rollbacks > self.max_rollbacks:
+            raise RuntimeError(
+                f"{reason} persisted through {self.max_rollbacks} "
+                "rollbacks — giving up (raise --max-rollbacks or inspect "
+                "the data/optimizer)")
+        with self.trace.span("resilience.rollback", cat="resilience",
+                             n=self._rollbacks):
+            self.ckpt.wait()
+            state = self.restore_or_init()
+            skip = self.rollback_data_skip * (2 ** (self._rollbacks - 1))
+            self.data.skip(skip)
+        self._skip_streak = 0
+        self.log(f"[trainer] rollback #{self._rollbacks} ({reason}): "
+                 f"resumed step {state.step}, skipped {skip} data "
+                 f"batch(es) forward")
+        return self._place(state)
 
     # -- preemption -----------------------------------------------------------
     def _install_signal_handlers(self):
@@ -287,13 +382,24 @@ class Trainer:
         self._install_signal_handlers()
         tokens_per_step = tc.global_batch * tc.seq_len
         while state.step < total:
+            if self.chaos is not None:
+                # injected kills / checkpoint corruption (may raise
+                # ChaosKill — a SystemExit(43) the relaunch recovers from)
+                self.chaos.train_hook(state.step, ckpt_dir=self.tc.ckpt_dir)
             if self.fault_hook:
                 self.fault_hook(state.step)  # test hook: may raise/kill
             with self.trace.span("train.step", cat="train",
                                  step=state.step + 1):
                 t0 = time.perf_counter()
                 with self.trace.span("train.data", cat="train"):
-                    batch_np = self.data.next_batch()
+                    batch_np = self._next_valid_batch(state.step)
+                    if self.chaos is not None and self.chaos.wants_poison:
+                        # constant pytree: the key rides along EVERY step
+                        # (value 1.0 off-fault), so chaos costs one compile
+                        batch_np = dict(batch_np)
+                        batch_np["chaos_scale"] = np.full(
+                            (batch_np["tokens"].shape[0],),
+                            self.chaos.poison_scale(state.step), np.float32)
                     batch = {k: jax.numpy.asarray(v)
                              for k, v in batch_np.items()}
                 t1 = time.perf_counter()
@@ -302,6 +408,8 @@ class Trainer:
                     params, opt_state, metrics = self._train_step(
                         state.params, state.opt_state, state.consts, batch)
                 t2 = time.perf_counter()
+                if self.chaos is not None:
+                    self.chaos.straggle(state.step)  # inside the dt window
                 with self.trace.span("train.sync", cat="train"):
                     jax.block_until_ready(metrics["loss"])
                 t3 = time.perf_counter()
@@ -329,6 +437,18 @@ class Trainer:
             row = {k: float(v) for k, v in metrics.items()}
             row.update(step=state.step, dt=dt)
             self.metrics_history.append(row)
+            skipped = row.get("nonfinite", 0.0) >= 1.0
+            if skipped:
+                # the jitted gate already kept the pre-step params/state;
+                # here we only account and decide whether to escalate
+                self._c_nonfinite.inc()
+                self._skip_streak += 1
+                self.log(f"[trainer] non-finite loss/grads at step "
+                         f"{state.step}: update skipped "
+                         f"({self._skip_streak}/{self.max_skips} before "
+                         "rollback)")
+            else:
+                self._skip_streak = 0
             self._g_loss.set(row["loss"])
             if "lr" in row:
                 self._g_lr.set(row["lr"])
@@ -349,6 +469,9 @@ class Trainer:
                 if self.metrics_out:
                     self.obs.write_jsonl(self.metrics_out,
                                          extra={"step": state.step})
+            if skipped and self._skip_streak >= self.max_skips:
+                state = self._rollback("non-finite loss/grads")
+                continue
             if self._preempted:
                 self.log("[trainer] preemption signal: checkpoint + exit 42")
                 self.save(state, background=False)

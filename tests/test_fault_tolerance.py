@@ -1,0 +1,363 @@
+"""End-to-end fault tolerance (repro.resilience): deterministic fault
+injection, non-finite skip/rollback escalation, checksummed checkpoints
+with newest-intact fallback, and kill/relaunch bit-exactness.
+
+Every fault the chaos harness can inject is driven to a VERIFIED
+recovery here — the recovery counters are asserted on the obs registry,
+not inferred from log lines."""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _propshim import given, settings, strategies as st
+
+from repro.ckpt.checkpoint import CheckpointCorruptError, CheckpointManager
+from repro.configs.base import OptimizerConfig, TrainConfig
+from repro.data.pipeline import SyntheticC4
+from repro.models import registry
+from repro.obs import metrics as obs_metrics
+from repro.resilience import ChaosEngine, ChaosKill, Fault
+from repro.resilience.chaos import corrupt_npz
+from repro.train import step as step_lib
+from repro.train.trainer import Trainer
+
+
+def _tc(tmp, steps=6, ckpt_every=0, **kw):
+    cfg = registry.get_smoke_config("llama_60m")
+    if "exec_mode" in kw:
+        cfg = dataclasses.replace(
+            cfg, param=dataclasses.replace(cfg.param,
+                                           exec_mode=kw.pop("exec_mode")))
+    return TrainConfig(model=cfg,
+                       optim=OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                             total_steps=steps),
+                       global_batch=4, seq_len=32, steps=steps,
+                       log_every=100, ckpt_every=ckpt_every, ckpt_dir=tmp,
+                       async_ckpt=False, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Chaos harness: spec parsing, fire-once semantics
+# ---------------------------------------------------------------------------
+
+def test_chaos_parse_spec():
+    eng = ChaosEngine.parse("kill@3,nonfinite@5,straggler@4:50", seed=7)
+    assert eng.faults == [Fault("kill", 3), Fault("nonfinite", 5),
+                          Fault("straggler", 4, 50)]
+    assert eng.wants_poison
+    assert not ChaosEngine.parse("kill@1").wants_poison
+
+
+@pytest.mark.parametrize("bad", ["frobnicate@3", "kill", "kill@x", ""])
+def test_chaos_parse_rejects_bad_spec(bad):
+    with pytest.raises(ValueError):
+        ChaosEngine.parse(bad)
+
+
+def test_chaos_fires_at_most_once():
+    eng = ChaosEngine.parse("nonfinite@3")
+    assert eng.poison_scale(2) == 1.0
+    assert np.isnan(eng.poison_scale(5))     # first opportunity at/after 3
+    assert eng.poison_scale(5) == 1.0        # never again (fire-once)
+    k = ChaosEngine.parse("kill@0")
+    with pytest.raises(SystemExit) as ei:
+        k.train_hook(0)
+    assert ei.value.code == ChaosKill.EXIT_CODE == 43
+    k.train_hook(0)                          # already fired: no-op
+
+
+# ---------------------------------------------------------------------------
+# Checksummed checkpoints: manifest integrity, corrupt fallback, stale tmp
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(2, 64), scale=st.floats(-4.0, 4.0),
+       bf16=st.booleans())
+def test_checksum_manifest_property(n, scale, bf16):
+    """Property: every saved leaf has a CRC32 recorded AS STORED, the
+    manifest digest matches a recompute, and a single flipped byte in
+    arrays.npz turns restore into CheckpointCorruptError."""
+    from repro.ckpt.checkpoint import _crc, _manifest_digest
+    tree = {"w": jnp.arange(n, dtype=jnp.float32) * scale,
+            "b": (jnp.ones(3, jnp.bfloat16) * scale if bf16
+                  else jnp.full(3, scale, jnp.float32))}
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d)
+        cm.save(1, tree, config_hash="h")
+        import json
+        with open(os.path.join(d, "step_00000001", "manifest.json")) as f:
+            man = json.load(f)
+        assert set(man["checksums"]) == {"w", "b"}
+        assert man["digest"] == _manifest_digest(man)
+        stored_b = np.asarray(tree["b"])
+        if bf16:
+            stored_b = stored_b.view(np.uint16)   # CRC is post bit-view
+        assert man["checksums"]["b"] == _crc(stored_b)
+        assert cm.verify_step(1)
+        corrupt_npz(os.path.join(d, "step_00000001", "arrays.npz"),
+                    seed=n)
+        assert not cm.verify_step(1)
+        with pytest.raises(CheckpointCorruptError):
+            cm.restore(tree, step=1, config_hash="h")
+
+
+def test_corrupt_ckpt_falls_back_to_previous_step():
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d)
+        cm.save(1, {"w": tree["w"]})
+        cm.save(2, {"w": tree["w"] * 2})
+        corrupt_npz(os.path.join(d, "step_00000002", "arrays.npz"))
+        with pytest.warns(UserWarning, match="corrupt"):
+            out, man = cm.restore(tree)
+        assert man["step"] == 1
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.arange(16, dtype=np.float32))
+        # explicit step: no fallback, the damage is the caller's answer
+        with pytest.raises(CheckpointCorruptError):
+            cm.restore(tree, step=2)
+
+
+def test_corrupt_manifest_detected():
+    tree = {"w": jnp.zeros(4)}
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d)
+        cm.save(1, tree)
+        man_path = os.path.join(d, "step_00000001", "manifest.json")
+        with open(man_path) as f:
+            text = f.read()
+        with open(man_path, "w") as f:
+            f.write(text.replace('"step": 1', '"step": 999'))
+        with pytest.raises(CheckpointCorruptError, match="digest"):
+            cm.restore(tree, step=1)
+
+
+def test_stale_tmp_ignored_and_cleaned_on_next_save():
+    tree = {"w": jnp.zeros(4)}
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d)
+        cm.save(3, tree)
+        stale = os.path.join(d, "step_00000007.tmp")
+        os.makedirs(stale)               # crash mid-publish leftover
+        with open(os.path.join(stale, "junk"), "w") as f:
+            f.write("partial")
+        assert cm.all_steps() == [3]     # tmp never counts as a step
+        assert cm.latest_step() == 3
+        out, man = cm.restore(tree)      # and never participates in restore
+        assert man["step"] == 3
+        cm.save(4, tree)                 # next save sweeps it
+        assert not os.path.exists(stale)
+        assert cm.all_steps() == [3, 4]
+
+
+# ---------------------------------------------------------------------------
+# Non-finite gate: the skip-step primitive, global and per-layer
+# ---------------------------------------------------------------------------
+
+def _one_step_setup():
+    from repro.optim import optimizers as opt_lib
+    cfg = registry.get_smoke_config("llama_60m")
+    api = registry.get_api(cfg)
+    params, consts = api.init(cfg, jax.random.PRNGKey(0), seed=0)
+    opt = opt_lib.make(OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                       total_steps=4))
+    opt_state = opt.init(params)
+    batch = {k: jnp.asarray(v) for k, v in
+             SyntheticC4(cfg.vocab_size, 32, 4, seed=0).next_batch().items()}
+    return cfg, api, opt, params, opt_state, consts, batch
+
+
+@pytest.mark.parametrize("update_mode", ["global", "per_layer"])
+def test_nonfinite_step_is_skipped_bit_exact(update_mode):
+    """A NaN chaos_scale must leave params AND optimizer state bit-exactly
+    untouched (metrics report nonfinite=1); scale=1.0 must be a no-op on
+    the numerics vs the same step without the key."""
+    cfg, api, opt, params, opt_state, consts, batch = _one_step_setup()
+    if update_mode == "global":
+        tstep = jax.jit(step_lib.make_train_step(cfg, api, opt))
+    else:
+        from repro.train import perlayer
+        tstep = jax.jit(perlayer.make_perlayer_train_step(cfg, api, opt))
+    b = batch["tokens"].shape[0]
+    poisoned = dict(batch,
+                    chaos_scale=jnp.full((b,), jnp.nan, jnp.float32))
+    p2, o2, m = tstep(params, opt_state, consts, poisoned)
+    assert float(m["nonfinite"]) == 1.0
+    for a, c in zip(jax.tree.leaves((params, opt_state)),
+                    jax.tree.leaves((p2, o2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    # scale 1.0: same update as the plain batch, and nonfinite=0
+    clean = dict(batch, chaos_scale=jnp.ones((b,), jnp.float32))
+    p3, _, m3 = tstep(params, opt_state, consts, clean)
+    p_ref, _, m_ref = tstep(params, opt_state, consts, batch)
+    assert float(m3["nonfinite"]) == 0.0
+    assert float(m3["loss"]) == pytest.approx(float(m_ref["loss"]),
+                                              rel=1e-6)
+    for a, c in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p3)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(c, np.float32), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Trainer escalation: skip -> rollback -> give up; data validation
+# ---------------------------------------------------------------------------
+
+def test_trainer_transient_nonfinite_skips_without_rollback():
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(_tc(d, steps=5), chaos=ChaosEngine.parse("nonfinite@2"),
+                     max_skips=2)
+        state = tr.run()
+        assert state.step == 5
+        snap = tr.obs.snapshot()
+        assert snap["resilience.nonfinite_steps"]["value"] == 1
+        assert snap["resilience.rollbacks"]["value"] == 0
+        assert snap["resilience.faults_injected{kind=nonfinite}"][
+            "value"] == 1
+        # exactly one row skipped, and training went on to finish finite
+        assert sum(r["nonfinite"] for r in tr.metrics_history) == 1.0
+        assert np.isfinite(tr.metrics_history[-1]["loss"])
+
+
+def test_trainer_rollback_restores_checkpoint_and_skips_data():
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(_tc(d, steps=6, ckpt_every=2),
+                     chaos=ChaosEngine.parse("nonfinite@3"), max_skips=1)
+        state = tr.run()
+        assert state.step == 6
+        snap = tr.obs.snapshot()
+        assert snap["resilience.rollbacks"]["value"] == 1
+        assert tr._rollbacks == 1
+        assert np.isfinite(tr.metrics_history[-1]["loss"])
+
+
+def test_trainer_gives_up_past_max_rollbacks():
+    with tempfile.TemporaryDirectory() as d:
+        chaos = ChaosEngine(
+            [Fault("nonfinite", i) for i in range(3, 9)])
+        tr = Trainer(_tc(d, steps=10, ckpt_every=2), chaos=chaos,
+                     max_skips=1, max_rollbacks=1)
+        with pytest.raises(RuntimeError, match="rollback"):
+            tr.run()
+
+
+def test_trainer_drops_corrupt_batches():
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(_tc(d, steps=4),
+                     chaos=ChaosEngine.parse("data_corrupt@2"))
+        state = tr.run()
+        assert state.step == 4
+        snap = tr.obs.snapshot()
+        assert snap["resilience.bad_batches"]["value"] >= 1
+        assert snap["resilience.faults_injected{kind=data_corrupt}"][
+            "value"] == 1
+        assert np.isfinite(tr.metrics_history[-1]["loss"])
+
+
+def test_injected_straggler_is_flagged_by_watchdog():
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(_tc(d, steps=12),
+                     chaos=ChaosEngine.parse("straggler@10:600"))
+        tr.run()
+        snap = tr.obs.snapshot()
+        assert snap["resilience.faults_injected{kind=straggler}"][
+            "value"] == 1
+        assert tr.watchdog.flagged, "600ms injected sleep not flagged"
+
+
+# ---------------------------------------------------------------------------
+# Kill + relaunch: bit-exact continuation, dense AND fused
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("exec_mode", ["dense", "fused"])
+def test_chaos_kill_relaunch_bit_exact(exec_mode):
+    """ChaosKill at step 4 (exit 43), relaunch into the same ckpt dir:
+    the continuation's per-step losses and final params must be
+    bit-identical to an uninterrupted run."""
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        ref = Trainer(_tc(d1, steps=6, ckpt_every=2, exec_mode=exec_mode))
+        ref_state = ref.run()
+
+        tr = Trainer(_tc(d2, steps=6, ckpt_every=2, exec_mode=exec_mode),
+                     chaos=ChaosEngine.parse("kill@4"))
+        with pytest.raises(SystemExit) as ei:
+            tr.run()
+        assert ei.value.code == 43
+        snap = tr.obs.snapshot()
+        assert snap["resilience.faults_injected{kind=kill}"]["value"] == 1
+
+        tr2 = Trainer(_tc(d2, steps=6, ckpt_every=2, exec_mode=exec_mode))
+        state2 = tr2.run()
+        assert state2.step == 6
+        # loss continuation: the resumed steps reproduce the reference
+        ref_by_step = {r["step"]: r["loss"] for r in ref.metrics_history}
+        for r in tr2.metrics_history:
+            assert r["loss"] == ref_by_step[r["step"]], (r, exec_mode)
+        for a, b in zip(jax.tree.leaves(ref_state.params),
+                        jax.tree.leaves(state2.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_relaunch_falls_back_past_corrupted_newest_ckpt():
+    """kill@5 then the newest checkpoint's arrays corrupted on disk: the
+    relaunch must verify, warn, and resume from the previous intact step
+    — never load garbage weights."""
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(_tc(d, steps=8, ckpt_every=2),
+                     chaos=ChaosEngine.parse("kill@5"))
+        with pytest.raises(SystemExit):
+            tr.run()
+        corrupt_npz(os.path.join(d, "step_00000004", "arrays.npz"))
+        logs = []
+        with pytest.warns(UserWarning, match="corrupt"):
+            tr2 = Trainer(_tc(d, steps=8, ckpt_every=2),
+                          log_fn=logs.append)
+            state = tr2.run()
+        assert state.step == 8
+        assert any("resumed from step 2" in l for l in logs), logs
+
+
+# ---------------------------------------------------------------------------
+# Fault-matrix acceptance: every train-side kind -> verified recovery
+# ---------------------------------------------------------------------------
+
+def test_fault_matrix_every_kind_recovers():
+    """One shared registry across kill + relaunch: all five train-side
+    fault kinds injected, run completes, and every recovery counter is
+    present in the snapshot."""
+    reg = obs_metrics.Registry()
+    with tempfile.TemporaryDirectory() as d:
+        chaos = ChaosEngine.parse(
+            "kill@3,data_corrupt@2,straggler@2:30,ckpt_corrupt@4,"
+            "nonfinite@4", seed=0)
+        tr = Trainer(_tc(d, steps=6, ckpt_every=2), chaos=chaos,
+                     max_skips=1, obs=reg)
+        with pytest.raises(SystemExit) as ei:
+            tr.run()
+        assert ei.value.code == 43
+        # relaunch with the SAME chaos engine (fire-once: kill is spent);
+        # ckpt_corrupt@4 then trashes the newest checkpoint right before
+        # nonfinite@4 forces a rollback — the rollback must fall back
+        # past the damage to the prior intact step
+        with pytest.warns(UserWarning, match="corrupt"):
+            tr2 = Trainer(_tc(d, steps=6, ckpt_every=2), chaos=chaos,
+                          max_skips=1, obs=reg)
+            state = tr2.run()
+        assert state.step == 6
+        assert np.isfinite(tr2.metrics_history[-1]["loss"])
+        snap = reg.snapshot()
+        for kind in ("kill", "data_corrupt", "straggler", "ckpt_corrupt",
+                     "nonfinite"):
+            key = f"resilience.faults_injected{{kind={kind}}}"
+            assert snap[key]["value"] >= 1, key
+        assert snap["resilience.rollbacks"]["value"] >= 1
+        assert snap["resilience.nonfinite_steps"]["value"] >= 1
+        assert snap["resilience.bad_batches"]["value"] >= 1

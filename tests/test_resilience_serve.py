@@ -1,0 +1,220 @@
+"""Serve-side resilience: deadlines, load shedding, slot-stall fault
+injection, bounded-run budget exhaustion, and the quant->sparse
+validated fallback. Invariant under test everywhere: every submitted
+request reaches a TERMINAL status — the engine never silently loses
+one — and cancelled requests release their KV pages."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.resilience import ChaosEngine
+from repro.serve.engine import ServeEngine
+
+TERMINAL = ("done", "rejected", "timed_out", "failed")
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = registry.get_smoke_config("llama_60m")
+    api = registry.get_api(cfg)
+    params, consts = api.init(cfg, jax.random.PRNGKey(0), seed=0)
+    return cfg, params, consts
+
+
+def _engine(model, **kw):
+    cfg, params, consts = model
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("paged", True)
+    kw.setdefault("block_len", 8)
+    return ServeEngine(cfg, params, consts, **kw)
+
+
+def _all_blocks_free(eng):
+    return eng.sched.blocks.blocks_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Deadlines
+# ---------------------------------------------------------------------------
+
+def test_deadline_ticks_cancels_and_releases_pages(model):
+    eng = _engine(model, deadline_ticks=4)
+    fast = eng.submit([5, 9], max_new_tokens=2)
+    slow = eng.submit([7, 11], max_new_tokens=50)
+    stats = eng.run_until_drained()
+    assert fast.status == "done"
+    assert slow.status == "timed_out" and not slow.done
+    assert "deadline" in slow.fail_reason
+    assert slow.t_done is not None
+    assert not eng._has_work()
+    assert _all_blocks_free(eng), "timed-out request pinned KV blocks"
+    snap = eng.obs.snapshot()
+    assert snap["serve.deadline_exceeded"]["value"] == 1
+    assert stats["summary"] == {"done": 1, "timed_out": 1}
+    assert stats["timed_out"] == [slow]
+
+
+def test_per_request_deadline_overrides_engine_default(model):
+    eng = _engine(model, deadline_ticks=100)
+    tight = eng.submit([5, 9], max_new_tokens=50, deadline_ticks=3)
+    loose = eng.submit([7, 11], max_new_tokens=6)
+    eng.run_until_drained()
+    assert tight.status == "timed_out"
+    assert loose.status == "done" and len(loose.out) == 6
+
+
+def test_queued_request_can_time_out_before_admission(model):
+    # 1 slot: the queued request's deadline lapses while it waits
+    eng = _engine(model, n_slots=1, deadline_ticks=5)
+    first = eng.submit([5, 9], max_new_tokens=12)
+    waiting = eng.submit([7, 11], max_new_tokens=4)
+    eng.run_until_drained()
+    assert first.status == "timed_out"       # 12 tokens > 5-tick budget
+    assert waiting.status in ("done", "timed_out")
+    assert "queued" in waiting.fail_reason if \
+        waiting.status == "timed_out" else True
+    assert not eng._has_work() and _all_blocks_free(eng)
+
+
+# ---------------------------------------------------------------------------
+# Load shedding
+# ---------------------------------------------------------------------------
+
+def test_max_queue_sheds_with_structured_rejection(model):
+    eng = _engine(model, max_queue=2)
+    reqs = [eng.submit([3 + i, 7], max_new_tokens=3) for i in range(5)]
+    shed = [r for r in reqs if r.status == "rejected"]
+    assert len(shed) == 3
+    for r in shed:
+        assert "max_queue=2" in r.fail_reason
+    stats = eng.run_until_drained()
+    assert all(r.status in TERMINAL for r in reqs)     # none silently lost
+    assert sum(r.status == "done" for r in reqs) == 2
+    snap = eng.obs.snapshot()
+    assert snap["serve.rejected"]["value"] == 3
+    assert stats["summary"] == {"done": 2, "rejected": 3}
+    assert stats["rejected"] == shed
+
+
+# ---------------------------------------------------------------------------
+# Slot stalls (chaos fault injection)
+# ---------------------------------------------------------------------------
+
+def test_stall_delays_but_preserves_output(model):
+    """A stalled slot freezes; the engine decodes around it and the
+    stalled request resumes with IDENTICAL tokens (greedy decode, K/V
+    isolation) — the fault costs latency, never correctness."""
+    prompts = [[5, 9, 11], [7, 13]]
+    ref = _engine(model)
+    ref_reqs = [ref.submit(p, max_new_tokens=6) for p in prompts]
+    ref.run_until_drained()
+
+    chaos = ChaosEngine.parse("stall@2:5", seed=3)
+    eng = _engine(model, tick_hook=chaos.serve_hook)
+    chaos.bind(eng.obs)
+    reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    stats = eng.run_until_drained()
+    assert all(r.status == "done" for r in reqs)
+    assert [r.out for r in reqs] == [r.out for r in ref_reqs]
+    assert stats["summary"] == {"done": 2}
+    snap = eng.obs.snapshot()
+    assert snap["resilience.faults_injected{kind=stall}"]["value"] == 1
+    # the stall cost ticks: completion is strictly later than the
+    # unstalled run for at least one request
+    assert max(r.t_done for r in reqs) > max(r.t_done for r in ref_reqs)
+
+
+def test_stall_past_deadline_drains_with_zero_wedged(model):
+    """Stall one slot for longer than the deadline: the victim times out
+    (pages released), everything else completes, the engine drains —
+    nothing spins forever even when EVERY active slot is stalled."""
+    chaos = ChaosEngine.parse("stall@3:50", seed=0)
+    eng = _engine(model, n_slots=1, deadline_ticks=12,
+                  tick_hook=chaos.serve_hook)
+    chaos.bind(eng.obs)
+    reqs = [eng.submit([3 + i, 7], max_new_tokens=4) for i in range(3)]
+    stats = eng.run_until_drained(max_steps=500)
+    assert not stats["exhausted"]
+    assert not eng._has_work() and _all_blocks_free(eng)
+    assert all(r.status in ("done", "timed_out") for r in reqs)
+    snap = eng.obs.snapshot()
+    assert snap["serve.deadline_exceeded"]["value"] >= 1
+    assert snap["resilience.faults_injected{kind=stall}"]["value"] == 1
+
+
+def test_stall_legacy_engine(model):
+    chaos = ChaosEngine.parse("stall@2:3", seed=1)
+    eng = _engine(model, paged=False, tick_hook=chaos.serve_hook)
+    chaos.bind(eng.obs)
+    reqs = [eng.submit([5 + i, 9], max_new_tokens=4) for i in range(2)]
+    eng.run_until_drained()
+    assert all(r.status == "done" and len(r.out) == 4 for r in reqs)
+    snap = eng.obs.snapshot()
+    assert snap["resilience.faults_injected{kind=stall}"]["value"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Budget exhaustion: failed is terminal but resumable
+# ---------------------------------------------------------------------------
+
+def test_budget_exhaustion_marks_failed_then_resumes(model):
+    eng = _engine(model, n_slots=1)
+    reqs = [eng.submit([3 + i, 7], max_new_tokens=6) for i in range(3)]
+    with pytest.warns(UserWarning, match="max_steps"):
+        stats = eng.run_until_drained(max_steps=2)
+    assert stats["exhausted"]
+    survivors = stats["unfinished"]
+    assert survivors
+    for r in survivors:
+        assert r.status == "failed"
+        assert "max_steps=2" in r.fail_reason
+    assert stats["summary"]["failed"] == len(survivors)
+    # calling the run loop again REVIVES and finishes them
+    stats2 = eng.run_until_drained()
+    assert not stats2["exhausted"]
+    assert all(r.status == "done" and len(r.out) == 6 for r in reqs)
+    assert stats2["summary"] == {"done": 3}
+
+
+def test_run_stream_budget_exhaustion(model):
+    eng = _engine(model)
+    reqs = [eng.submit([3 + i, 7], max_new_tokens=8, arrival=i)
+            for i in range(3)]
+    stats = eng.run_stream(max_steps=3)
+    assert stats["exhausted"]
+    assert all(r.status == "failed" for r in stats["unfinished"])
+    stats2 = eng.run_stream()
+    assert not stats2["exhausted"]
+    assert all(r.status == "done" for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# Quant fallback
+# ---------------------------------------------------------------------------
+
+def test_quant_without_artifact_still_raises_by_default(model):
+    cfg, params, consts = model
+    with pytest.raises(ValueError, match="calibrated consts"):
+        ServeEngine(cfg, params, consts, exec_mode="quant")
+
+
+def test_quant_fallback_degrades_to_sparse_and_serves(model):
+    cfg, params, consts = model
+    with pytest.warns(UserWarning, match="degraded"):
+        eng = ServeEngine(cfg, params, consts, exec_mode="quant",
+                          quant_fallback=True, n_slots=1, max_len=32)
+    assert eng.quant_fell_back
+    assert eng.cfg.param.exec_mode == "sparse"
+    assert eng.obs.snapshot()["serve.quant_fallback"]["value"] == 1
+    r = eng.submit([5, 9, 11], max_new_tokens=4)
+    eng.run_until_drained()
+    assert r.status == "done" and len(r.out) == 4
+    # and the degraded path is the VALIDATED bf16 sparse decode: same
+    # tokens as an engine built sparse on purpose
+    ref = ServeEngine(cfg, params, consts, exec_mode="sparse", n_slots=1,
+                      max_len=32)
+    r2 = ref.submit([5, 9, 11], max_new_tokens=4)
+    ref.run_until_drained()
+    assert r.out == r2.out
